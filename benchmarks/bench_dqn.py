@@ -1,0 +1,139 @@
+"""Paper §6.5: Deep Q-Network with in-graph dynamic control flow vs an
+out-of-graph (client-driven) baseline. The paper reports +21% from
+fusing the environment interaction, replay writes, conditional sampling
+/ Q-learning / target-network updates into one dataflow graph.
+
+Environment: a small synthetic control task (linear dynamics + reward),
+entirely in-graph. All the DQN conditionals of Fig. 16 are present:
+- conditional replay-buffer writes (every step, circular),
+- conditional Q-learning step (only when buffer has >= BATCH entries),
+- conditional target-network refresh (every TARGET_EVERY steps),
+- epsilon-greedy explore/exploit branch (repro.core.cond).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cond, while_loop
+
+from .common import time_fn
+
+OBS, ACT, HID = 8, 4, 64
+BUF = 256
+BATCH = 32
+TARGET_EVERY = 50
+STEPS = 200
+LR = 1e-3
+GAMMA = 0.97
+
+
+def _mlp_init(key):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (OBS, HID)) * 0.3,
+            "w2": jax.random.normal(k2, (HID, ACT)) * 0.3}
+
+
+def _q(params, obs):
+    return jnp.tanh(obs @ params["w1"]) @ params["w2"]
+
+
+def _env_step(state, action):
+    """Synthetic linear dynamics; reward peaks when x tracks a target."""
+    x, key = state
+    key, sub = jax.random.split(key)
+    push = (action.astype(jnp.float32) / (ACT - 1) - 0.5) * 0.2
+    x = x * 0.98 + push + 0.01 * jax.random.normal(sub, (OBS,))
+    reward = -jnp.sum(x ** 2)
+    return (x, key), reward
+
+
+def _q_update(params, target, batch_obs, batch_act, batch_rew,
+              batch_next):
+    def loss(p):
+        q = _q(p, batch_obs)
+        qa = jnp.take_along_axis(q, batch_act[:, None], 1)[:, 0]
+        tq = _q(target, batch_next).max(-1)
+        td = batch_rew + GAMMA * tq - qa
+        return jnp.mean(td ** 2)
+
+    g = jax.grad(loss)(params)
+    return jax.tree.map(lambda p, gg: p - LR * gg, params, g)
+
+
+def _carry0(key):
+    params = _mlp_init(key)
+    return {
+        "params": params,
+        "target": params,
+        "obs": jnp.zeros((OBS,)),
+        "key": key,
+        "t": jnp.int32(0),
+        "buf_obs": jnp.zeros((BUF, OBS)),
+        "buf_act": jnp.zeros((BUF,), jnp.int32),
+        "buf_rew": jnp.zeros((BUF,)),
+        "buf_next": jnp.zeros((BUF, OBS)),
+        "ret": jnp.float32(0.0),
+    }
+
+
+def _agent_step(c):
+    key, k_eps, k_act, k_samp = jax.random.split(c["key"], 4)
+    # explore/exploit conditional (§2.2 reinforcement-learning usage)
+    explore = jax.random.uniform(k_eps) < 0.1
+    action = cond(explore,
+                  lambda: jax.random.randint(k_act, (), 0, ACT),
+                  lambda: jnp.argmax(_q(c["params"], c["obs"])).astype(
+                      jnp.int32))
+    (x2, key), reward = _env_step((c["obs"], key), action)
+    # conditional replay write (circular)
+    slot = c["t"] % BUF
+    c = dict(c,
+             buf_obs=c["buf_obs"].at[slot].set(c["obs"]),
+             buf_act=c["buf_act"].at[slot].set(action),
+             buf_rew=c["buf_rew"].at[slot].set(reward),
+             buf_next=c["buf_next"].at[slot].set(x2))
+
+    # conditional Q-learning step once the buffer has BATCH entries
+    def do_train(params):
+        idx = jax.random.randint(k_samp, (BATCH,), 0,
+                                 jnp.minimum(c["t"] + 1, BUF))
+        return _q_update(params, c["target"], c["buf_obs"][idx],
+                         c["buf_act"][idx], c["buf_rew"][idx],
+                         c["buf_next"][idx])
+
+    params = cond(c["t"] >= BATCH, do_train, lambda p: p, c["params"])
+    # conditional target refresh
+    target = cond(c["t"] % TARGET_EVERY == TARGET_EVERY - 1,
+                  lambda: params, lambda: c["target"])
+    return dict(c, params=params, target=target, obs=x2, key=key,
+                t=c["t"] + 1, ret=c["ret"] + reward)
+
+
+def rows():
+    key = jax.random.PRNGKey(0)
+
+    @jax.jit
+    def in_graph(carry):
+        return while_loop(lambda c: c["t"] < STEPS, _agent_step, carry,
+                          max_iters=STEPS)
+
+    one = jax.jit(_agent_step)
+
+    def out_of_graph(carry):
+        for _ in range(STEPS):
+            carry = one(carry)
+        return carry
+
+    c0 = _carry0(key)
+    t_in = time_fn(in_graph, c0, iters=3, warmup=1)
+    t_out = time_fn(out_of_graph, c0, iters=2, warmup=1)
+    return [
+        ("dqn/in_graph_step", t_in / STEPS, f"total_us={t_in:.0f}"),
+        ("dqn/out_of_graph_step", t_out / STEPS, f"total_us={t_out:.0f}"),
+        ("dqn/speedup", (t_out / t_in - 1) * 100.0,
+         "percent_paper_reports_21"),
+    ]

@@ -1,0 +1,52 @@
+"""Paper §6.1 / Fig. 12 companion: in-graph vs out-of-graph loop overhead.
+
+The paper reports ~5x more iterations/sec for in-graph loops vs client-
+driven loops. Here: an N-iteration loop with a small matmul body, driven
+(a) by one in-graph while_loop, (b) by N separate jitted calls from
+Python (the out-of-graph baseline).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import while_loop
+
+from .common import time_fn
+
+N_ITERS = 200
+DIM = 128
+
+
+def rows():
+    w = jax.random.normal(jax.random.PRNGKey(0), (DIM, DIM)) * 0.05
+    x = jnp.ones((8, DIM))
+
+    @jax.jit
+    def in_graph(x):
+        return while_loop(lambda c: c[0] < N_ITERS,
+                          lambda c: (c[0] + 1, jnp.tanh(c[1] @ w)),
+                          (jnp.int32(0), x))[1]
+
+    @jax.jit
+    def one_step(x):
+        return jnp.tanh(x @ w)
+
+    def out_of_graph(x):
+        for _ in range(N_ITERS):
+            x = one_step(x)
+        return x
+
+    t_in = time_fn(in_graph, x)
+    t_out = time_fn(out_of_graph, x, iters=5)
+    per_iter_in = t_in / N_ITERS
+    per_iter_out = t_out / N_ITERS
+    return [
+        ("loop_overhead/in_graph_iter", per_iter_in,
+         f"iters_per_s={1e6 / per_iter_in:.0f}"),
+        ("loop_overhead/out_of_graph_iter", per_iter_out,
+         f"iters_per_s={1e6 / per_iter_out:.0f}"),
+        ("loop_overhead/speedup", t_out / t_in,
+         f"paper_reports~5x"),
+    ]

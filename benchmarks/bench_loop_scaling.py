@@ -1,0 +1,35 @@
+"""Paper Fig. 11: distributed while-loop iteration rate, with/without a
+per-iteration AllReduce barrier, as device count grows (1..8 host
+devices here; the paper used 1..64 machines)."""
+
+from __future__ import annotations
+
+from .common import run_multi_device
+
+BODY = """
+from repro.launch.mesh import make_mesh
+from repro.dist.pipeline import distributed_while
+
+N_ITERS = 100
+for nd in (1, 2, 4, 8):
+    mesh = make_mesh((nd,), ("d",))
+    x = jnp.ones((nd, 4, 4))
+    for barrier in (False, True):
+        fn = distributed_while(lambda x: x * 1.0001, N_ITERS, x,
+                               mesh=mesh, axis="d", barrier=barrier)
+        t = time_fn(fn, x, iters=5)
+        per_iter = t / N_ITERS
+        tag = "barrier" if barrier else "nodep"
+        print(f"loop_scaling/{tag}_dev{nd},{per_iter:.2f},"
+              f"iters_per_s={1e6 / per_iter:.0f}")
+"""
+
+
+def rows():
+    out = run_multi_device(BODY, n_devices=8)
+    rows = []
+    for line in out.strip().splitlines():
+        parts = line.split(",")
+        if len(parts) == 3:
+            rows.append((parts[0], float(parts[1]), parts[2]))
+    return rows

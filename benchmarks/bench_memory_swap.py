@@ -1,0 +1,53 @@
+"""Paper Table 1: LSTM training time/iteration vs sequence length, with
+memory swapping (save_policy="offload") vs device-resident ("all") vs
+recompute ("carry").
+
+On this CPU container we cannot OOM a 16 GB HBM, so in addition to the
+wall-times we report the *device-resident stack bytes* each policy would
+hold on the TPU target (analytic: saved residual bytes per iteration x
+sequence length), which is the quantity Table 1's OOM column probes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rnn
+
+from .common import time_fn
+
+BATCH = 32          # paper used 512 on a K40; scaled for CPU wall-time
+UNITS = 128
+SEQ_LENS = (100, 200, 500)
+
+
+def rows():
+    out = []
+    key = jax.random.PRNGKey(0)
+    p = rnn.lstm_init(key, UNITS, UNITS)
+
+    for policy in ("all", "offload", "carry"):
+        for S in SEQ_LENS:
+            x = jax.random.normal(key, (BATCH, S, UNITS))
+
+            @jax.jit
+            def step(p, x):
+                def loss(p):
+                    y, _ = rnn.dynamic_rnn(p, x, hidden=UNITS,
+                                           save_policy=policy)
+                    return (y ** 2).mean()
+                return jax.grad(loss)(p)
+
+            t = time_fn(step, p, x, iters=3, warmup=1)
+            # device-resident residual bytes per policy (TPU target):
+            if policy == "all":
+                # residuals ~ carry + gate pre-activations per step
+                dev_bytes = S * BATCH * (UNITS * 2 + 4 * UNITS + UNITS) * 4
+            elif policy == "carry":
+                dev_bytes = S * BATCH * (UNITS * 2 + UNITS) * 4
+            else:  # offload: stacks in host memory
+                dev_bytes = 0
+            out.append((f"memory_swap/{policy}_seq{S}", t / S,
+                        f"device_stack_MiB={dev_bytes / 2**20:.1f}"))
+    return out

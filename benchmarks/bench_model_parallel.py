@@ -1,0 +1,48 @@
+"""Paper Fig. 15: 8-layer LSTM model-parallel training step across
+1..8 devices (one layer per stage, pipelined). The paper reports 5.5x
+speedup at 8 GPUs; on fake host devices the *schedule* is what we can
+validate (bubble fraction shrinking with microbatch count)."""
+
+from __future__ import annotations
+
+from .common import run_multi_device
+
+BODY = """
+from repro.launch.mesh import make_mesh
+from repro.dist.pipeline import make_pipelined_fn
+
+UNITS = 128
+SEQ = 32
+
+def make_stage(units):
+    def stage_fn(w, x):
+        # one LSTM layer applied across the sequence (scan inside stage)
+        def cell(c_h, xt):
+            c, h = c_h
+            z = jnp.concatenate([xt, h], -1) @ w
+            i, f, g, o = jnp.split(z, 4, -1)
+            c2 = jax.nn.sigmoid(f + 1) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h2 = jax.nn.sigmoid(o) * jnp.tanh(c2)
+            return (c2, h2), h2
+        B = x.shape[0]
+        c0 = jnp.zeros((B, UNITS)); h0 = jnp.zeros((B, UNITS))
+        _, ys = jax.lax.scan(cell, (c0, h0), jnp.swapaxes(x, 0, 1))
+        return jnp.swapaxes(ys, 0, 1)
+    return stage_fn
+
+for nd in (1, 2, 4, 8):
+    mesh = make_mesh((nd,), ("stage",))
+    W = jax.random.normal(jax.random.PRNGKey(0),
+                          (nd, 2 * UNITS, 4 * UNITS)) * 0.05
+    fn = make_pipelined_fn(make_stage(UNITS), mesh, "stage")
+    xs = jax.random.normal(jax.random.PRNGKey(1), (8, 4, SEQ, UNITS))
+    t = time_fn(fn, W, xs, iters=3, warmup=1)
+    print(f"model_parallel/stages{nd},{t:.0f},layers_per_stage=1")
+"""
+
+
+def rows():
+    out = run_multi_device(BODY, n_devices=8)
+    return [(p[0], float(p[1]), p[2]) for p in
+            (line.split(",") for line in out.strip().splitlines())
+            if len(p) == 3]

@@ -1,0 +1,33 @@
+"""Paper Fig. 12: the parallel_iterations knob on an 8-stage pipelined
+loop — microbatches in flight 1..8 (the paper swept 1..32 on 8 GPUs)."""
+
+from __future__ import annotations
+
+from .common import run_multi_device
+
+BODY = """
+from repro.launch.mesh import make_mesh
+from repro.dist.pipeline import make_pipelined_fn
+
+mesh = make_mesh((8,), ("stage",))
+W = jax.random.normal(jax.random.PRNGKey(0), (8, 256, 256)) * 0.05
+
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+
+xs = jax.random.normal(jax.random.PRNGKey(1), (16, 8, 256))
+base = None
+for p in (1, 2, 4, 8):
+    fn = make_pipelined_fn(stage_fn, mesh, "stage", parallel_iterations=p)
+    t = time_fn(fn, W, xs, iters=5)
+    if base is None:
+        base = t
+    print(f"parallel_iterations/p{p},{t:.1f},speedup_vs_p1={base / t:.2f}")
+"""
+
+
+def rows():
+    out = run_multi_device(BODY, n_devices=8)
+    return [(p[0], float(p[1]), p[2]) for p in
+            (line.split(",") for line in out.strip().splitlines())
+            if len(p) == 3]

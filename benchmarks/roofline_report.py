@@ -1,0 +1,61 @@
+"""Aggregate dry-run JSONs into the §Roofline table (markdown + CSV)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COLS = ("arch", "shape", "status", "fit", "compute_s", "memory_s",
+        "collective_s", "dominant", "useful", "frac")
+
+
+def load(out_dir: str = "experiments/dryrun", sub: str = "singlepod"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, sub, "*.json"))):
+        r = json.load(open(path))
+        rows.append(r)
+    return rows
+
+
+def table(out_dir: str = "experiments/dryrun", sub: str = "singlepod"):
+    lines = ["| arch | shape | mem/dev GiB (donated) | compute s | "
+             "memory s | collective s | dominant | MODEL/HLO | "
+             "roofline frac | note |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load(out_dir, sub):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"skipped | — | — | {r['reason'][:60]} |")
+            continue
+        if r["status"] == "error":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"ERROR | — | — | {r['error'][:60]} |")
+            continue
+        rf = r["roofline"]
+        ma = r["memory_analysis"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{ma.get('peak_estimate_donated_gib', ma['peak_estimate_gib'])} | "
+            f"{rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
+            f"{rf['collective_s']:.3f} | {rf['dominant']} | "
+            f"{rf['useful_ratio']:.2f} | {rf['roofline_fraction']:.3f} | "
+            f"{r['note'][:70]} |")
+    return "\n".join(lines)
+
+
+def rows():
+    """CSV rows for benchmarks.run: per-cell roofline bound (seconds)."""
+    out = []
+    for r in load():
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        out.append((f"roofline/{r['arch']}/{r['shape']}",
+                    rf["bound_s"] * 1e6,
+                    f"dominant={rf['dominant']};frac={rf['roofline_fraction']:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,40 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_dqn, bench_loop_overhead, bench_loop_scaling,
+                   bench_memory_swap, bench_model_parallel,
+                   bench_parallel_iterations, bench_static_vs_dynamic,
+                   roofline_report)
+
+    suites = [
+        ("Fig11", bench_loop_scaling),
+        ("Fig12", bench_parallel_iterations),
+        ("Table1", bench_memory_swap),
+        ("Fig14", bench_static_vs_dynamic),
+        ("Fig15", bench_model_parallel),
+        ("S6.5", bench_dqn),
+        ("S6.1", bench_loop_overhead),
+        ("Roofline", roofline_report),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, mod in suites:
+        try:
+            for name, us, derived in mod.rows():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception:  # noqa: BLE001 - report and continue
+            failures += 1
+            print(f"{tag}/FAILED,-1,{traceback.format_exc(limit=1)!r}",
+                  file=sys.stderr)
+    if failures:
+        print(f"# {failures} suite(s) failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""In-graph Deep Q-Network (paper §6.5, Fig. 16): environment steps,
+conditional replay writes, conditional Q-learning and target refresh
+all inside ONE compiled while_loop — the agent trains without Python in
+the loop.
+
+    PYTHONPATH=src python examples/dqn_in_graph.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import bench_dqn as dqn
+from repro.core import while_loop
+
+
+def main():
+    key = jax.random.PRNGKey(1)
+    carry = dqn._carry0(key)
+
+    @jax.jit
+    def run_episode(carry, n):
+        return while_loop(lambda c: c["t"] < n, dqn._agent_step, carry,
+                          max_iters=2000)
+
+    # untrained return over the first 200 steps
+    c_pre = run_episode(dict(carry, t=jnp.int32(0)), jnp.int32(200))
+    pre = float(c_pre["ret"]) / 200
+
+    # train for 2000 in-graph steps (one compiled call)
+    c_tr = run_episode(dict(carry, t=jnp.int32(0)), jnp.int32(2000))
+
+    # evaluate the trained policy: fresh env, greedy only
+    c_eval = dict(c_tr, t=jnp.int32(0), ret=jnp.float32(0.0),
+                  obs=jnp.zeros_like(c_tr["obs"]))
+    c_post = run_episode(c_eval, jnp.int32(200))
+    post = float(c_post["ret"]) / 200
+
+    print(f"avg reward/step before training: {pre:8.4f}")
+    print(f"avg reward/step after  training: {post:8.4f}")
+    print("entire agent-environment loop ran as ONE dataflow graph "
+          f"({int(c_tr['t'])} interactions, zero Python round-trips)")
+    assert post > pre, "training should improve the return"
+
+
+if __name__ == "__main__":
+    main()

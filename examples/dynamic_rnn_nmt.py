@@ -1,0 +1,90 @@
+"""NMT-style encoder-decoder LSTM on variable-length sequences — the
+paper's flagship dynamic_rnn application (§2.2): both encoder and
+decoder are while-loops over TensorArrays; per-example sequence lengths
+freeze state past each sentence's end; everything reverse-differentiates
+through the loops (trained end-to-end here on a toy copy task).
+
+    PYTHONPATH=src python examples/dynamic_rnn_nmt.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import rnn
+from repro.optim import adamw
+
+VOCAB, EMB, HID, MAXLEN = 32, 24, 48, 12
+BATCH, STEPS, LR = 32, 250, 5e-3
+
+
+def init(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": jax.random.normal(ks[0], (VOCAB, EMB)) * 0.3,
+        "enc": rnn.lstm_init(ks[1], EMB, HID),
+        "dec": rnn.lstm_init(ks[2], EMB + HID, HID),
+        "out": jax.random.normal(ks[3], (HID, VOCAB)) * 0.3,
+    }
+
+
+def model_loss(params, src, src_len, tgt):
+    """Alignment-known toy translation: tgt[i] = rot(src[i]).
+
+    The decoder consumes the source embedding stream plus the encoder's
+    final state — both RNNs are repro.core.while_loop dynamic_rnns with
+    per-example lengths, differentiated end-to-end.
+    """
+    emb = params["embed"][src]                       # (B, S, E)
+    # encoder: dynamic_rnn honours per-example lengths (§2.2)
+    _, (c, h) = rnn.dynamic_rnn(params["enc"], emb, src_len, hidden=HID)
+    dec_in = jnp.concatenate(
+        [emb, jnp.broadcast_to(h[:, None], (h.shape[0], tgt.shape[1],
+                                            HID))], axis=-1)
+    outs, _ = rnn.dynamic_rnn(params["dec"], dec_in, src_len, hidden=HID)
+    logits = outs @ params["out"]
+    logp = jax.nn.log_softmax(logits)
+    mask = jnp.arange(tgt.shape[1])[None] < src_len[:, None]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], -1)[..., 0]
+    return (nll * mask).sum() / mask.sum()
+
+
+def batch(key):
+    k1, k2 = jax.random.split(key)
+    lens = jax.random.randint(k1, (BATCH,), 3, MAXLEN + 1)
+    toks = jax.random.randint(k2, (BATCH, MAXLEN), 1, VOCAB)
+    mask = jnp.arange(MAXLEN)[None] < lens[:, None]
+    src = jnp.where(mask, toks, 0)
+    tgt = jnp.where(mask, (toks + 7) % VOCAB, 0)   # "translation": rot-7
+    return src, lens, tgt
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    params = init(key)
+    opt_cfg = adamw.AdamWConfig(lr=LR, weight_decay=0.0)
+    opt = adamw.init(params)
+
+    @jax.jit
+    def step(params, opt, src, lens, tgt):
+        loss, grads = jax.value_and_grad(model_loss)(params, src, lens, tgt)
+        params, opt, _ = adamw.apply(opt_cfg, params, grads, opt)
+        return params, opt, loss
+
+    for i in range(STEPS):
+        key, sub = jax.random.split(key)
+        src, lens, tgt = batch(sub)
+        params, opt, loss = step(params, opt, src, lens, tgt)
+        if i % 50 == 0:
+            print(f"step {i:4d}  masked-NLL {float(loss):.4f}")
+    assert float(loss) < 0.5, "toy translation should be mostly learned"
+    print(f"final loss {float(loss):.4f} — variable-length NMT loop "
+          "trained through repro.core.while_loop")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Batched serving with the in-graph generation loop: prefill a batch of
+prompts, then decode greedily inside ONE while_loop with per-sequence
+EOS early-exit (dynamic control flow in inference — the loop stops as
+soon as every sequence finished, not at max_new).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch smollm-135m
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.serve import engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = model_zoo.init_params(cfg, key)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 2,
+                                cfg.vocab)
+
+    gen = jax.jit(lambda p, t: engine.generate(
+        p, cfg, t, max_new=args.max_new, eos_id=1))
+    t0 = time.perf_counter()
+    result = gen(params, prompt)
+    jax.block_until_ready(result.tokens)
+    dt = time.perf_counter() - t0
+
+    print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"prompt={args.prompt_len} max_new={args.max_new}")
+    print(f"[serve] loop ran {int(result.steps)} decode steps "
+          f"(early exit saves {args.max_new - int(result.steps)}) "
+          f"in {dt * 1e3:.0f}ms")
+    for b in range(args.batch):
+        toks = result.tokens[b, :int(result.lengths[b])].tolist()
+        print(f"  seq{b} len={int(result.lengths[b])}: {toks[:12]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Roofline terms for TPU v5e (target hardware; container is CPU-only).
+
+    compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective term = collective_bytes / (chips x 50e9 B/s ICI link)
+
+HLO_* are the analyzer's per-device totals x chips (equivalently:
+per-device / per-chip peak). The collective term assumes one ICI link
+utilized per chip per transfer — v5e has multiple links per axis, so
+this is conservative; relative comparisons (the hillclimb) are
+unaffected. MODEL_FLOPS is the analytic 6·N·D (train) / 2·N·D (inference)
+useful-work count; MODEL_FLOPS / HLO_FLOPs exposes remat/padding/
+capacity-factor waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+# roofline arithmetic intensity knee: FLOPs/byte where compute == memory
+KNEE = PEAK_FLOPS / HBM_BW  # ~240 FLOPs/byte
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    bound_s: float            # max of the three = step-time lower bound
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float       # model_flops / hlo_flops
+    roofline_fraction: float  # compute_s / bound_s (1.0 = compute-bound)
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def terms(*, flops_per_device: float, hbm_bytes_per_device: float,
+          collective_bytes_per_device: float, model_flops_total: float,
+          n_devices: int) -> RooflineTerms:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = hbm_bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+    vals = {"compute": compute_s, "memory": memory_s,
+            "collective": collective_s}
+    dominant = max(vals, key=vals.get)
+    bound = max(vals.values())
+    hlo_total = flops_per_device * n_devices
+    return RooflineTerms(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, bound_s=bound,
+        model_flops=model_flops_total, hlo_flops=hlo_total,
+        useful_ratio=(model_flops_total / hlo_total) if hlo_total else 0.0,
+        roofline_fraction=(compute_s / bound) if bound else 0.0)
+
+
+def model_flops(cfg, shape, n_active_params: int) -> float:
+    """Analytic useful FLOPs for one step of (cfg, shape).
+
+    train:   6·N·tokens + 6·B·S²·H·hd·L_attn   (causal: x1/2 -> 3·...)
+    prefill: 2·N·tokens + 2·B·S²·H·hd·L_attn·(1/2)
+    decode:  2·N·B      + 4·B·S·H·hd·L_attn    (KV-cache reads)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    N = n_active_params
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    if cfg.family == "hybrid":
+        import math
+        L_attn = math.ceil(cfg.n_layers / cfg.shared_attn_every)
+    elif cfg.family == "ssm":
+        L_attn = 0
+    elif cfg.family == "audio":
+        L_attn = cfg.n_layers + cfg.encoder_layers  # + cross attn below
+    else:
+        L_attn = cfg.n_layers
+
+    if shape.kind == "train":
+        tokens = B * S
+        attn = 3.0 * B * S * S * H * hd * L_attn  # 6·(1/2 causal)
+        if cfg.family == "audio":
+            # encoder is non-causal over n_frames; cross attn S x F
+            F = cfg.n_frames
+            attn = (6.0 * B * F * F * H * hd * cfg.encoder_layers
+                    + 3.0 * B * S * S * H * hd * cfg.n_layers
+                    + 6.0 * B * S * F * H * hd * cfg.n_layers)
+        return 6.0 * N * tokens + attn
+    if shape.kind == "prefill":
+        tokens = B * S
+        attn = 1.0 * B * S * S * H * hd * L_attn  # 2·(1/2 causal)
+        if cfg.family == "audio":
+            F = cfg.n_frames
+            attn = (2.0 * B * F * F * H * hd * cfg.encoder_layers
+                    + 1.0 * B * S * S * H * hd * cfg.n_layers
+                    + 2.0 * B * S * F * H * hd * cfg.n_layers)
+        return 2.0 * N * tokens + attn
+    # decode: one token per sequence
+    attn = 4.0 * B * S * H * hd * L_attn
+    if cfg.family == "audio":
+        attn += 4.0 * B * cfg.n_frames * H * hd * cfg.n_layers
+    return 2.0 * N * B + attn
+
+
+def what_would_move_it(t: RooflineTerms) -> str:
+    if t.dominant == "compute":
+        if t.useful_ratio < 0.5:
+            return ("compute-bound but <50% useful: cut recompute/padding "
+                    "(remat policy, capacity factor, causal block skipping)")
+        return "compute-bound at high useful ratio: near roofline"
+    if t.dominant == "memory":
+        return ("HBM-bound: fuse / rematerialize less, offload stacks to "
+                "host, larger block sizes (Pallas), cast saves to bf16")
+    return ("collective-bound: reshard to cut all-gathers (FSDP axis), "
+            "overlap collectives with compute, int8-compress DCN traffic")

@@ -1,0 +1,20 @@
+# The paper's primary contribution: in-graph dynamic control flow with
+# distributed execution and automatic differentiation, as a composable
+# JAX library. See DESIGN.md §2 for the TF->JAX/TPU mapping.
+from .cond import cond
+from .dataflow_ref import dataflow_cond, dataflow_while
+from .frames import ROOT_TAG, Tag, TaggedValue, format_tag
+from .higher_order import foldl, foldr, map_fn, scan
+from .primitives import (apply_op, enter, exit_, merge, next_iteration,
+                         switch)
+from .tensor_array import TensorArray, WriteOnceError
+from .while_loop import fori_loop, while_loop
+
+__all__ = [
+    "ROOT_TAG", "Tag", "TaggedValue", "format_tag",
+    "switch", "merge", "enter", "exit_", "next_iteration", "apply_op",
+    "TensorArray", "WriteOnceError",
+    "while_loop", "fori_loop",
+    "cond", "dataflow_cond", "dataflow_while",
+    "scan", "map_fn", "foldl", "foldr",
+]

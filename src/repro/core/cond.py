@@ -1,0 +1,44 @@
+"""``cond(pred, true_fn, false_fn)`` (paper §2.1, compiled per §4.2).
+
+Two lowerings:
+
+- ``backend="native"``: ``lax.cond`` — XLA executes exactly one branch.
+  This matches the paper's single-device execution (only the taken
+  branch runs) and is the default.
+
+- ``backend="select"``: both branches execute, the untaken one is
+  discarded by a select. This is the SPMD embodiment of the paper's
+  *deadness* (§4.4): when a conditional is partitioned across devices,
+  every partition runs its piece and un-taken results travel as dead
+  (masked) values. XLA uses the same transformation internally when a
+  conditional must be vectorized; we expose it because it is the only
+  semantics available *inside* ``shard_map``-partitioned stages, where a
+  per-device branch decision cannot suppress a collective that peers are
+  waiting on — exactly the Recv-on-untaken-branch problem of §4.4, with
+  masking playing the role of the propagated ``is_dead`` signal.
+
+Automatic differentiation: ``lax.cond`` already implements the paper's
+§5.1 rule — the gradient of a cond is a cond on the same predicate with
+the branch gradients — so the native path inherits it; the select path
+differentiates as a select (mathematically identical a.e.).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cond(pred, true_fn: Callable, false_fn: Callable, *operands: Any,
+         backend: str = "native") -> Any:
+    """Conditional computation; returns the taken branch's outputs."""
+    if backend == "native":
+        return jax.lax.cond(pred, true_fn, false_fn, *operands)
+    if backend == "select":
+        t_out = true_fn(*operands)
+        f_out = false_fn(*operands)
+        return jax.tree.map(
+            lambda t, f: jnp.where(pred, t, f), t_out, f_out)
+    raise ValueError(f"unknown cond backend {backend!r}")

@@ -1,0 +1,146 @@
+"""Higher-order functionals defined via ``while_loop`` + ``TensorArray``.
+
+The paper (§2.1, Fig. 2) stresses that the primitive set stays small:
+``map_fn``, ``foldl``, ``foldr`` and ``scan`` are *defined in terms of*
+``while_loop`` and TensorArrays. We reproduce that construction exactly
+— including the unstack → loop → stack pattern of Fig. 2 — on top of
+``repro.core.while_loop``, so all of them inherit its reverse-mode AD
+and save policies.
+
+``backend="native"`` routes to ``lax.scan`` for production use (same
+semantics, XLA-native residual saving); tests assert both agree.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .tensor_array import TensorArray
+from .while_loop import while_loop
+
+
+def _leading_dim(xs) -> int:
+    sizes = {jnp.shape(l)[0] for l in jax.tree.leaves(xs)}
+    if len(sizes) != 1:
+        raise ValueError(f"inconsistent leading dims: {sizes}")
+    return sizes.pop()
+
+
+_IS_TA = lambda x: isinstance(x, TensorArray)
+
+
+def _ta_map(fn, *trees):
+    """tree.map over pytrees whose leaves are TensorArrays."""
+    return jax.tree.map(fn, *trees, is_leaf=_IS_TA)
+
+
+def scan(fn: Callable, elems: Any, init: Any, *,
+         reverse: bool = False, backend: str = "paper",
+         save_policy: str = "all", parallel_iterations: int = 1) -> Any:
+    """Generalized prefix-sum (paper Fig. 2).
+
+    ``fn(carry, x) -> carry``; returns the stacked per-step carries,
+    exactly like the paper's ``scan`` (the result tensor contains
+    ``fn(init, e0), fn(fn(init, e0), e1), ...``).
+    """
+    n = _leading_dim(elems)
+    if backend == "native":
+        def body(c, x):
+            c2 = fn(c, x)
+            return c2, c2
+        _, ys = jax.lax.scan(body, init, elems, reverse=reverse)
+        return ys
+
+    # Fig. 2, verbatim structure: unstack elems into a TensorArray, loop
+    # with (i, acc, result_ta), stack the results.
+    elem_ta = jax.tree.map(TensorArray.unstack, elems)
+    out_shapes = jax.eval_shape(fn, init,
+                                _ta_map(lambda t: t.read(0), elem_ta))
+    result_ta = jax.tree.map(
+        lambda s: TensorArray.create(n, s.shape, s.dtype), out_shapes)
+
+    def pred(state):
+        i, a, ta = state
+        return i < n
+
+    def body(state):
+        i, a, ta = state
+        ix = (n - 1 - i) if reverse else i
+        a_out = fn(a, _ta_map(lambda t: t.read(ix), elem_ta))
+        ta = _ta_map(lambda t, v: t.write(ix, v), ta, a_out)
+        return (i + 1, a_out, ta)
+
+    _, _, r = while_loop(pred, body, (jnp.asarray(0, jnp.int32), init,
+                                      result_ta),
+                         max_iters=n, save_policy=save_policy,
+                         parallel_iterations=parallel_iterations,
+                         name="scan")
+    return _ta_map(lambda t: t.stack(), r)
+
+
+def map_fn(fn: Callable, elems: Any, *, backend: str = "paper",
+           save_policy: str = "all") -> Any:
+    """Apply ``fn`` to every leading-dim slice (paper §2.1)."""
+    def step(_, x):
+        return fn(x)
+    # map is a scan whose carry is the per-element output (ignored).
+    n = _leading_dim(elems)
+    first = jax.tree.map(lambda l: l[0], elems)
+    init = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        jax.eval_shape(fn, first))
+    return scan(step, elems, init, backend=backend, save_policy=save_policy)
+
+
+def foldl(fn: Callable, elems: Any, init: Any, *, backend: str = "paper",
+          save_policy: str = "all") -> Any:
+    """Left fold; returns only the final accumulator."""
+    n = _leading_dim(elems)
+    if backend == "native":
+        def body(c, x):
+            return fn(c, x), None
+        out, _ = jax.lax.scan(body, init, elems)
+        return out
+
+    elem_ta = jax.tree.map(TensorArray.unstack, elems)
+
+    def pred(state):
+        i, a = state
+        return i < n
+
+    def body(state):
+        i, a = state
+        x = _ta_map(lambda t: t.read(i), elem_ta)
+        return (i + 1, fn(a, x))
+
+    _, out = while_loop(pred, body, (jnp.asarray(0, jnp.int32), init),
+                        max_iters=n, save_policy=save_policy, name="foldl")
+    return out
+
+
+def foldr(fn: Callable, elems: Any, init: Any, *, backend: str = "paper",
+          save_policy: str = "all") -> Any:
+    """Right fold; returns only the final accumulator."""
+    n = _leading_dim(elems)
+    if backend == "native":
+        def body(c, x):
+            return fn(c, x), None
+        out, _ = jax.lax.scan(body, init, elems, reverse=True)
+        return out
+
+    elem_ta = jax.tree.map(TensorArray.unstack, elems)
+
+    def pred(state):
+        i, a = state
+        return i < n
+
+    def body(state):
+        i, a = state
+        x = _ta_map(lambda t: t.read(n - 1 - i), elem_ta)
+        return (i + 1, fn(a, x))
+
+    _, out = while_loop(pred, body, (jnp.asarray(0, jnp.int32), init),
+                        max_iters=n, save_policy=save_policy, name="foldr")
+    return out

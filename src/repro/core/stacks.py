@@ -1,0 +1,144 @@
+"""Bounded save-stacks for backpropagation through loops (paper Fig. 9, §5.3).
+
+The paper rewrites the forward loop to *push* every intermediate value
+the gradient loop needs onto a per-value stack, and the gradient loop to
+*pop* them in reverse. §5.1 notes that when loop variables have static
+shape and the iteration count a static upper bound, "the XLA compiler
+may lower the stack operations to read/write operations on a contiguous
+mutable array" — that lowering is exactly what we implement: each stack
+is a preallocated ``(capacity, *elem_shape)`` buffer written with
+``dynamic_update_index_in_dim`` and read with ``dynamic_index_in_dim``.
+
+Memory policies (paper §5.3 swapping, adapted to TPU memory kinds):
+
+- device-resident stacks (TF default behaviour);
+- host-resident stacks (``pinned_host`` memory kind on the stack
+  sharding): pushes and pops lower to D2H/H2D transfers which XLA's
+  latency-hiding scheduler overlaps with compute — the TPU analogue of
+  the paper's multi-stream GPU↔CPU swapping. In SPMD programs the host
+  placement needs a concrete sharding, supplied by the caller (the model
+  layer knows the mesh); single-device callers get it automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import SingleDeviceSharding
+
+HOST = "pinned_host"
+DEVICE = "device"
+
+
+@functools.lru_cache(maxsize=None)
+def host_offload_supported() -> bool:
+    """True if this backend accepts pinned_host placements inside jit."""
+    try:
+        dev = jax.devices()[0]
+        kinds = {m.kind for m in dev.addressable_memories()}
+        if HOST not in kinds:
+            return False
+        h = SingleDeviceSharding(dev, memory_kind=HOST)
+        d = SingleDeviceSharding(dev, memory_kind=DEVICE)
+
+        def f(x):
+            return jax.device_put(jax.device_put(x, h), d) + 1.0
+
+        jax.jit(f)(jnp.zeros((2,))).block_until_ready()
+        return True
+    except Exception:  # pragma: no cover - backend specific
+        return False
+
+
+def _single_dev(kind: str):
+    return SingleDeviceSharding(jax.devices()[0], memory_kind=kind)
+
+
+def _stacked_host_sharding(elem_sharding, capacity: int):
+    """Host sharding for (capacity, *elem) given the element's sharding."""
+    if elem_sharding is None:
+        return _single_dev(HOST)
+    spec = P(None, *elem_sharding.spec)
+    return NamedSharding(elem_sharding.mesh, spec, memory_kind=HOST)
+
+
+def _elem_host_sharding(elem_sharding):
+    if elem_sharding is None:
+        return _single_dev(HOST)
+    return NamedSharding(elem_sharding.mesh, elem_sharding.spec,
+                         memory_kind=HOST)
+
+
+def _elem_device_sharding(elem_sharding):
+    if elem_sharding is None:
+        return _single_dev(DEVICE)
+    return NamedSharding(elem_sharding.mesh, elem_sharding.spec,
+                         memory_kind=DEVICE)
+
+
+def _constrain_stacked(buf, elem_sharding):
+    """Pin the stack buffer's partitioning to P(None, *elem_spec).
+
+    Without this GSPMD picks the stack sharding by propagation, which
+    (measured on dbrx train_4k) keeps the saved activations unsharded on
+    the sequence dim — 30 GiB/device instead of 1.9 GiB.
+    """
+    if elem_sharding is None:
+        return buf
+    return jax.lax.with_sharding_constraint(
+        buf, NamedSharding(elem_sharding.mesh,
+                           P(None, *elem_sharding.spec)))
+
+
+def make_stacks(shapes: Sequence[jax.ShapeDtypeStruct], capacity: int,
+                offload: bool = False,
+                elem_shardings: Optional[Sequence] = None) -> list:
+    """Preallocate one bounded stack per saved intermediate."""
+    bufs = [jnp.zeros((capacity, *s.shape), dtype=s.dtype) for s in shapes]
+    shs = elem_shardings or [None] * len(bufs)
+    bufs = [_constrain_stacked(b, s) for b, s in zip(bufs, shs)]
+    if offload:
+        bufs = [jax.device_put(b, _stacked_host_sharding(s, capacity))
+                if s is not None or len(jax.devices()) == 1 else b
+                for b, s in zip(bufs, shs)]
+    return bufs
+
+
+def stacks_push(stacks: list, index, leaves: Sequence[Any],
+                offload: bool = False,
+                elem_shardings: Optional[Sequence] = None) -> list:
+    """Push one iteration's values at `index` (the paper's Push op).
+
+    With offloading, the value is transferred to host before the update,
+    so the device-resident working set stays O(elem) not O(capacity).
+    """
+    shs = elem_shardings or [None] * len(stacks)
+    out = []
+    for buf, leaf, s in zip(stacks, leaves, shs):
+        leaf = jnp.asarray(leaf)
+        if offload:
+            leaf = jax.device_put(leaf, _elem_host_sharding(s))
+        upd = jax.lax.dynamic_update_index_in_dim(buf, leaf, index, axis=0)
+        out.append(_constrain_stacked(upd, s))
+    return out
+
+
+def stacks_read(stacks: list, index, offload: bool = False,
+                elem_shardings: Optional[Sequence] = None) -> list:
+    """Pop (read) one iteration's values at `index` (the paper's Pop op)."""
+    shs = elem_shardings or [None] * len(stacks)
+    out = []
+    for buf, s in zip(stacks, shs):
+        leaf = jax.lax.dynamic_index_in_dim(buf, index, axis=0,
+                                            keepdims=False)
+        if s is not None:
+            leaf = jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(s.mesh, s.spec))
+        if offload:
+            leaf = jax.device_put(leaf, _elem_device_sharding(s))
+        out.append(leaf)
+    return out

@@ -1,0 +1,113 @@
+"""Differentiable TensorArray (paper §2.1, §5.2), functional-style.
+
+The paper's TensorArray is a mutable resource object addressed by a
+handle; its gradient story (§5.2) requires (a) each location written at
+most once in the differentiated computation, (b) multiple reads from one
+location summing their partial gradients in the dual array, and (c) the
+dual ops ``read ↔ grad().write``, ``unstack ↔ grad().stack``.
+
+In JAX the functional translation is an immutable array-of-tensors value
+threaded through the computation; JAX's cotangent accumulation then
+*implements* the dual construction: the VJP of ``read`` is a one-hot
+scatter-add into the cotangent array (= ``grad_ta.write``), multiple
+reads of one index naturally sum, and ``stack``/``unstack`` transpose to
+each other. The tests in ``tests/core/test_tensor_array.py`` pin this
+behaviour against §5.2.
+
+TensorArrays are registered as pytrees so they can be loop variables of
+``repro.core.while_loop`` — the Fig. 2 pattern (scan via while_loop +
+TensorArray) works unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class WriteOnceError(RuntimeError):
+    pass
+
+
+@jax.tree_util.register_pytree_node_class
+class TensorArray:
+    """Fixed-capacity array of tensors of uniform shape/dtype."""
+
+    def __init__(self, data: jnp.ndarray, written: Optional[jnp.ndarray] = None):
+        self._data = data
+        if written is None:
+            written = jnp.zeros((data.shape[0],), dtype=bool)
+        self._written = written
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def create(size: int, elem_shape: Sequence[int], dtype=jnp.float32) -> "TensorArray":
+        return TensorArray(jnp.zeros((size, *elem_shape), dtype=dtype))
+
+    @staticmethod
+    def unstack(ts: jnp.ndarray) -> "TensorArray":
+        """ta.unstack(ts): element i := ts[i]; all slots marked written."""
+        return TensorArray(jnp.asarray(ts),
+                           jnp.ones((ts.shape[0],), dtype=bool))
+
+    # -- core ops (paper §2.1) ----------------------------------------------
+    def read(self, ix) -> jnp.ndarray:
+        """ta.read(ix). Differentiable; VJP is grad_ta.write(ix, g)."""
+        return jax.lax.dynamic_index_in_dim(self._data, ix, axis=0,
+                                            keepdims=False)
+
+    def write(self, ix, t) -> "TensorArray":
+        """ta.write(ix, t) -> new TensorArray.
+
+        Write-once is enforced eagerly (concrete indices); under tracing
+        the check is skipped — the AD requirement (§5.2) is a *program*
+        property which the eager tests establish.
+        """
+        t = jnp.asarray(t)
+        try:
+            if bool(self._written[ix]):
+                raise WriteOnceError(
+                    f"TensorArray location {ix} written twice; the gradient "
+                    "construction of §5.2 requires write-once")
+        except jax.errors.TracerBoolConversionError:
+            pass
+        except jax.errors.ConcretizationTypeError:
+            pass
+        data = jax.lax.dynamic_update_index_in_dim(
+            self._data, t.astype(self._data.dtype), ix, axis=0)
+        written = self._written.at[ix].set(True)
+        return TensorArray(data, written)
+
+    def stack(self) -> jnp.ndarray:
+        """ta.stack(): pack elements into one tensor (dual of unstack)."""
+        return self._data
+
+    def gather(self, indices) -> jnp.ndarray:
+        return jnp.take(self._data, indices, axis=0)
+
+    def size(self) -> int:
+        return self._data.shape[0]
+
+    # -- misc ---------------------------------------------------------------
+    @property
+    def dtype(self):
+        return self._data.dtype
+
+    @property
+    def elem_shape(self) -> Tuple[int, ...]:
+        return self._data.shape[1:]
+
+    def __repr__(self) -> str:
+        return (f"TensorArray(size={self.size()}, elem_shape={self.elem_shape}, "
+                f"dtype={self.dtype})")
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self._data, self._written), None
+
+    @classmethod
+    def tree_unflatten(cls, aux: Any, children):
+        data, written = children
+        return cls(data, written)

@@ -1,0 +1,28 @@
+"""jit'd public wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention as _kernel
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k"))
+def flash_attention(q, k, v, *, causal: bool = True, blk_q: int = 128,
+                    blk_k: int = 128):
+    """Dispatch: compiled Pallas on TPU, interpret-mode elsewhere."""
+    return _kernel(q, k, v, causal=causal, blk_q=blk_q, blk_k=blk_k,
+                   interpret=not _on_tpu())
+
+
+__all__ = ["flash_attention", "attention_ref"]

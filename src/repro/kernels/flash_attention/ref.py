@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, S, H, D); k/v: (B, T, KV, D) -> (B, S, H, D). fp32 math."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qf, kf) / math.sqrt(D)
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p, vf)
+    return o.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,81 @@
+"""Pallas TPU fused LSTM cell.
+
+The paper's dynamic_rnn workload (§6.2-6.4) spends its compute in the
+per-step cell: one (B, D+H)×(D+H, 4H) matmul plus four gate
+nonlinearities. Unfused, XLA materializes the (B, 4H) pre-activation to
+HBM between the matmul and the gates; this kernel keeps the gate block
+in VMEM and applies the nonlinearities in-register — one HBM round-trip
+per cell step instead of three.
+
+Grid: (B/blk_b, H/blk_h). Each cell computes a (blk_b, 4·blk_h) slice of
+the pre-activation by contracting the full (D+H) dimension (streamed in
+VMEM), then the gate math. The four gate columns for one h-block are
+gathered via the index map (4 strided column blocks of w).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(xh_ref, w_ref, b_ref, c_ref, cout_ref, hout_ref, *,
+                 blk_h: int):
+    xh = xh_ref[...].astype(jnp.float32)                 # (blk_b, D+H)
+    w = w_ref[...].astype(jnp.float32)                   # (D+H, 4*blk_h)
+    b = b_ref[...].astype(jnp.float32)                   # (1, 4*blk_h)
+    c = c_ref[...].astype(jnp.float32)                   # (blk_b, blk_h)
+    z = jax.lax.dot_general(xh, w, (((1,), (0,)), ((), ()))) + b
+    i = z[:, 0 * blk_h:1 * blk_h]
+    f = z[:, 1 * blk_h:2 * blk_h]
+    g = z[:, 2 * blk_h:3 * blk_h]
+    o = z[:, 3 * blk_h:4 * blk_h]
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    cout_ref[...] = c_new.astype(cout_ref.dtype)
+    hout_ref[...] = h_new.astype(hout_ref.dtype)
+
+
+def lstm_cell(w, b, x, c, h, *, blk_b: int = 128, blk_h: int = 128,
+              interpret: bool = True):
+    """w: (D+H, 4H); b: (4H,); x: (B, D); c/h: (B, H) -> (c_new, h_new)."""
+    B, D = x.shape
+    H = h.shape[1]
+    blk_b = min(blk_b, B)
+    blk_h = min(blk_h, H)
+    assert B % blk_b == 0 and H % blk_h == 0, (B, H, blk_b, blk_h)
+    nh = H // blk_h
+
+    # Reorder w columns so one h-block's four gates are contiguous:
+    # (D+H, 4, nh, blk_h) -> (D+H, nh, 4, blk_h) -> (D+H, 4H)
+    w_r = (w.reshape(D + H, 4, nh, blk_h).transpose(0, 2, 1, 3)
+           .reshape(D + H, 4 * H))
+    b_r = (b.reshape(4, nh, blk_h).transpose(1, 0, 2)
+           .reshape(1, 4 * H))
+    xh = jnp.concatenate([x, h], axis=-1)
+
+    grid = (B // blk_b, nh)
+    kernel = functools.partial(_lstm_kernel, blk_h=blk_h)
+    c_new, h_new = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_b, D + H), lambda bi, hi: (bi, 0)),
+            pl.BlockSpec((D + H, 4 * blk_h), lambda bi, hi: (0, hi)),
+            pl.BlockSpec((1, 4 * blk_h), lambda bi, hi: (0, hi)),
+            pl.BlockSpec((blk_b, blk_h), lambda bi, hi: (bi, hi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk_b, blk_h), lambda bi, hi: (bi, hi)),
+            pl.BlockSpec((blk_b, blk_h), lambda bi, hi: (bi, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H), c.dtype),
+            jax.ShapeDtypeStruct((B, H), h.dtype),
+        ],
+        interpret=interpret,
+    )(xh, w_r, b_r, c)
+    return c_new, h_new

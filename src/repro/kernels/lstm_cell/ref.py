@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused LSTM cell kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(w, b, x, c, h):
+    """w: (D+H, 4H); b: (4H,); x: (B, D); c/h: (B, H).
+
+    Gate order [i, f, g, o]; forget-gate bias +1 (standard LSTM trick,
+    matches repro.models.rnn.lstm_cell). Returns (c_new, h_new).
+    """
+    z = (jnp.concatenate([x, h], axis=-1).astype(jnp.float32)
+         @ w.astype(jnp.float32) + b.astype(jnp.float32))
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c_new = (jax.nn.sigmoid(f + 1.0) * c.astype(jnp.float32)
+             + jax.nn.sigmoid(i) * jnp.tanh(g))
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return c_new.astype(c.dtype), h_new.astype(h.dtype)

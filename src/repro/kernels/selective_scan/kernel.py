@@ -1,0 +1,83 @@
+"""Pallas TPU selective-scan (mamba1 recurrence) kernel.
+
+This is the canonical "GPU kernel whose insight must be re-thought for
+TPU" case (DESIGN.md §2): the CUDA selective-scan holds the per-channel
+state h in registers/SRAM while marching down the sequence. Here the
+state block lives in **VMEM scratch** for the duration of one grid cell,
+the channel dimension is tiled across the grid (channels are
+independent), and the sequential walk down the chunk is a
+``lax.fori_loop`` *inside* the kernel — so h never round-trips to HBM
+between timesteps, which is exactly what makes the XLA lowering of this
+recurrence memory-bound (§Roofline) and this kernel worthwhile.
+
+Grid: (B, Di/blk_d). Block: full chunk Q × blk_d channels × N states.
+VMEM per cell @ (Q=128, blk_d=256, N=16): dt/x/y 128·256·4B ≈ 128KB each,
+B/C 128·16·4B ≈ 8KB, h 256·16·4B ≈ 16KB, A 256·16·4B — ~0.5MB total.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ss_kernel(dt_ref, A_ref, B_ref, C_ref, x_ref, h0_ref, y_ref, hout_ref,
+               *, q: int):
+    A = A_ref[0].astype(jnp.float32)                      # (blk_d, N)
+    h = h0_ref[0].astype(jnp.float32)                     # (blk_d, N)
+    dt = dt_ref[0].astype(jnp.float32)                    # (Q, blk_d)
+    x = x_ref[0].astype(jnp.float32)                      # (Q, blk_d)
+    B_ = B_ref[0].astype(jnp.float32)                     # (Q, N)
+    C_ = C_ref[0].astype(jnp.float32)                     # (Q, N)
+
+    def step(t, carry):
+        h, y = carry
+        dt_t = dt[t][:, None]                             # (blk_d, 1)
+        dA = jnp.exp(dt_t * A)                            # (blk_d, N)
+        dBx = (dt_t * x[t][:, None]) * B_[t][None, :]
+        h = dA * h + dBx
+        y_t = jnp.sum(h * C_[t][None, :], axis=1)         # (blk_d,)
+        y = jax.lax.dynamic_update_index_in_dim(y, y_t, t, axis=0)
+        return h, y
+
+    y0 = jnp.zeros((q, x.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, q, step, (h, y0))
+    y_ref[0] = y.astype(y_ref.dtype)
+    hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def selective_scan(dt, A, B_, C_, x, h0, *, blk_d: int = 256,
+                   interpret: bool = True):
+    """Shapes as in ref.py. Returns (y (B,Q,Di), h_out (B,Di,N))."""
+    B, Q, Di = x.shape
+    N = A.shape[1]
+    blk_d = min(blk_d, Di)
+    assert Di % blk_d == 0
+    nd = Di // blk_d
+
+    grid = (B, nd)
+    kernel = functools.partial(_ss_kernel, q=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, blk_d), lambda b, d: (b, 0, d)),   # dt
+            pl.BlockSpec((1, blk_d, N), lambda b, d: (0, d, 0)),   # A (bcast B)
+            pl.BlockSpec((1, Q, N), lambda b, d: (b, 0, 0)),       # B_
+            pl.BlockSpec((1, Q, N), lambda b, d: (b, 0, 0)),       # C_
+            pl.BlockSpec((1, Q, blk_d), lambda b, d: (b, 0, d)),   # x
+            pl.BlockSpec((1, blk_d, N), lambda b, d: (b, d, 0)),   # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, blk_d), lambda b, d: (b, 0, d)),   # y
+            pl.BlockSpec((1, blk_d, N), lambda b, d: (b, d, 0)),   # h_out
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Q, Di), x.dtype),
+            jax.ShapeDtypeStruct((B, Di, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dt, A[None], B_, C_, x, h0)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the selective-scan (mamba1 recurrence) kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt, A, B_, C_, x, h0):
+    """Sequential reference recurrence.
+
+    dt: (B, Q, Di)   softplus'd step sizes
+    A:  (Di, N)      negative state matrix (diagonal)
+    B_: (B, Q, N)    input projections
+    C_: (B, Q, N)    output projections
+    x:  (B, Q, Di)   conv'd activations
+    h0: (B, Di, N)   incoming state
+    Returns (y (B, Q, Di), h_out (B, Di, N)). fp32 math.
+    """
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    B_ = B_.astype(jnp.float32)
+    C_ = C_.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    h = h0.astype(jnp.float32)
+    Q = x.shape[1]
+    ys = []
+    for t in range(Q):
+        dA = jnp.exp(dt[:, t][..., None] * A)            # (B, Di, N)
+        dBx = (dt[:, t] * x[:, t])[..., None] * B_[:, t][:, None, :]
+        h = dA * h + dBx
+        ys.append(jnp.einsum("bdn,bn->bd", h, C_[:, t]))
+    return jnp.stack(ys, axis=1), h

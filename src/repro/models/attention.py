@@ -1,0 +1,155 @@
+"""Chunked online-softmax attention (flash-style) in pure XLA.
+
+This is the dry-run / CPU path; ``repro.kernels.flash_attention`` is the
+TPU Pallas fast path (same math, validated against ``ref.py``).
+
+Design notes (see DESIGN.md §3 and EXPERIMENTS.md §Perf):
+- GQA is computed in grouped form (q reshaped to (B, S, KV, G, D)) so KV
+  heads are never materialized repeated.
+- Memory is O(q_chunk × k_chunk) per step instead of O(S²): the outer
+  q-chunk loop and inner k-chunk loop both lower to rolled XLA loops
+  whose trip counts the HLO analyzer multiplies out.
+- ``skip_masked_blocks=True`` unrolls the q-chunk loop and gives each
+  q-chunk an inner loop over only the k-chunks at or below the causal
+  diagonal — halving attention FLOPs for long sequences (a beyond-paper
+  optimization measured in §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pad_to(x, mult: int, axis: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      k_chunk: int = 1024,
+                      q_offset=0,
+                      kv_valid_len: Optional[jax.Array] = None,
+                      skip_masked_blocks: bool = False):
+    """q: (B,S,H,D); k/v: (B,T,KV,D); returns (B,S,H,D).
+
+    q_offset: absolute position of q[0] (for cached decode/prefill).
+    kv_valid_len: mask out cache positions >= this length.
+    """
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, T)
+
+    qg = (q * scale).reshape(B, S, KV, G, D)
+    qg, S_valid = _pad_to(qg, q_chunk, axis=1)
+    k, T_valid = _pad_to(k, k_chunk, axis=1)
+    v, _ = _pad_to(v, k_chunk, axis=1)
+    Sp, Tp = qg.shape[1], k.shape[1]
+    nq, nk = Sp // q_chunk, Tp // k_chunk
+
+    kv_limit = jnp.asarray(T_valid if kv_valid_len is None else kv_valid_len)
+
+    def kv_block(j):
+        ks = jax.lax.dynamic_slice_in_dim(k, j * k_chunk, k_chunk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, j * k_chunk, k_chunk, axis=1)
+        kpos = j * k_chunk + jnp.arange(k_chunk)
+        return ks, vs, kpos
+
+    @functools.partial(jax.checkpoint, static_argnums=())
+    def attend_block(acc, m, l, qc, qpos, j):
+        """One (q-chunk, kv-chunk) online-softmax update.
+
+        jax.checkpoint = flash-attention backward: the (Qc, Kc) score and
+        probability blocks are RECOMPUTED in the gradient pass instead of
+        saved — without this, AD of the chunk loops stacks every p block
+        (O(S*T) memory, 9 GiB at smollm train_4k) and the whole point of
+        chunking is lost.
+        """
+        ks, vs, kpos = kv_block(j)
+        # (B, KV, G, Qc, Kc), fp32 accumulation
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qc, ks,
+                       preferred_element_type=jnp.float32)
+        mask = kpos[None, :] < kv_limit
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vs.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return acc_new, m_new, l_new
+
+    def q_block(i_static_or_traced, static_nk):
+        """Process one q chunk against `static_nk` kv chunks."""
+        i = i_static_or_traced
+
+        qc = jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, axis=1)
+        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        acc0 = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+
+        def inner(carry, j):
+            acc, m, l = carry
+            return attend_block(acc, m, l, qc, qpos, j), None
+
+        (acc, m, l), _ = jax.lax.scan(
+            inner, (acc0, m0, l0), jnp.arange(static_nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, KV, G, Qc, D) -> (B, Qc, KV, G, D)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    if skip_masked_blocks and causal and nq > 1:
+        # Unrolled q-chunk loop; per-chunk static triangular bound on the
+        # kv loop: exact FLOPs, no masked-block waste beyond the diagonal.
+        blocks = []
+        for i in range(nq):
+            hi = min(nk, math.ceil(((i + 1) * q_chunk + q_offset) / k_chunk))
+            blocks.append(q_block(i, max(hi, 1)))
+        out = jnp.concatenate(blocks, axis=1)
+    else:
+        out = jax.lax.map(lambda i: q_block(i, nk), jnp.arange(nq))
+        # (nq, B, Qc, KV, G, D) -> (B, S, KV, G, D)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, Sp, KV, G, D)
+
+    out = out[:, :S_valid]
+    return out.reshape(B, S_valid, H, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, cur_len):
+    """Single-position attention against a cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, T, KV, D); cur_len: scalar —
+    number of valid cache positions (includes the current token).
+    """
+    B, _, H, D = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = (q * scale).reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    mask = jnp.arange(T)[None, None, None, :] < cur_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

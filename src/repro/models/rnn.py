@@ -1,0 +1,128 @@
+"""LSTM + ``dynamic_rnn`` — the paper's flagship application (§6.2-6.4).
+
+``dynamic_rnn`` is implemented exactly as the paper describes: a
+``repro.core.while_loop`` over time steps reading inputs from a
+TensorArray and writing outputs to another, with per-example sequence
+lengths (state frozen past each example's length). It therefore inherits
+the stack-saving reverse-mode AD (§5.1) and the memory policies (§5.3):
+``save_policy="offload"`` reproduces Table 1 (train on sequences that
+would OOM device memory, swapping saved state to host).
+
+The LSTM cell matmul is the compute hot-spot; ``repro.kernels.lstm_cell``
+is the fused Pallas version.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import core
+
+
+def lstm_init(key, input_dim: int, hidden: int, dtype=jnp.float32) -> Dict:
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(input_dim + hidden)
+    return {
+        # fused (input+hidden) -> 4 gates [i, f, g, o]
+        "w": jax.random.normal(k1, (input_dim + hidden, 4 * hidden),
+                               dtype) * scale,
+        "b": jnp.zeros((4 * hidden,), dtype),
+    }
+
+
+def lstm_cell(params: Dict, x, state, *, kernel=None):
+    """x: (B, D); state: (c, h) each (B, H). Returns (y, new_state)."""
+    c, h = state
+    if kernel is not None:  # Pallas fused path
+        c_new, h_new = kernel(params["w"], params["b"], x, c, h)
+        return h_new, (c_new, h_new)
+    z = jnp.concatenate([x, h], axis=-1) @ params["w"] + params["b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, (c_new, h_new)
+
+
+def dynamic_rnn(cell_params: Dict, inputs: jax.Array,
+                seq_lens: Optional[jax.Array] = None, *,
+                hidden: int, save_policy: str = "all",
+                parallel_iterations: int = 1,
+                cell=lstm_cell) -> Tuple[jax.Array, Tuple]:
+    """Paper §2.2 dynamic_rnn: while_loop + TensorArrays.
+
+    inputs: (B, S, D); seq_lens: (B,) or None.
+    Returns (outputs (B, S, H), final_state).
+    """
+    B, S, D = inputs.shape
+    in_ta = core.TensorArray.unstack(jnp.swapaxes(inputs, 0, 1))  # (S,B,D)
+    out_ta = core.TensorArray.create(S, (B, hidden), inputs.dtype)
+    c0 = jnp.zeros((B, hidden), inputs.dtype)
+    h0 = jnp.zeros((B, hidden), inputs.dtype)
+    lens = (jnp.full((B,), S, jnp.int32) if seq_lens is None
+            else seq_lens.astype(jnp.int32))
+    max_needed = S
+
+    def cond_fn(state):
+        t, c, h, ta = state
+        # dynamic trip count: stop once every sequence is exhausted
+        return t < jnp.max(lens)
+
+    def body_fn(state):
+        t, c, h, ta = state
+        x_t = in_ta.read(t)
+        y, (c2, h2) = cell(cell_params, x_t, (c, h))
+        active = (t < lens)[:, None]
+        c2 = jnp.where(active, c2, c)
+        h2 = jnp.where(active, h2, h)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        ta = ta.write(t, y)
+        return (t + 1, c2, h2, ta)
+
+    _, c, h, out = core.while_loop(
+        cond_fn, body_fn, (jnp.asarray(0, jnp.int32), c0, h0, out_ta),
+        max_iters=max_needed, save_policy=save_policy,
+        parallel_iterations=parallel_iterations, name="dynamic_rnn")
+    return jnp.swapaxes(out.stack(), 0, 1), (c, h)
+
+
+def static_rnn(cell_params: Dict, inputs: jax.Array, *, hidden: int,
+               cell=lstm_cell) -> Tuple[jax.Array, Tuple]:
+    """Statically-unrolled baseline (the paper's Fig. 14 comparison)."""
+    B, S, D = inputs.shape
+    c = jnp.zeros((B, hidden), inputs.dtype)
+    h = jnp.zeros((B, hidden), inputs.dtype)
+    ys = []
+    for t in range(S):
+        y, (c, h) = cell(cell_params, inputs[:, t], (c, h))
+        ys.append(y)
+    return jnp.stack(ys, axis=1), (c, h)
+
+
+def multilayer_lstm_params(key, n_layers: int, input_dim: int, hidden: int,
+                           dtype=jnp.float32):
+    keys = jax.random.split(key, n_layers)
+    return [lstm_init(keys[i], input_dim if i == 0 else hidden, hidden,
+                      dtype) for i in range(n_layers)]
+
+
+def multilayer_dynamic_rnn(params_list, inputs, *, hidden: int,
+                           save_policy: str = "all",
+                           stage_fn=None) -> jax.Array:
+    """Stacked LSTM (paper §6.4 model-parallel workload).
+
+    ``stage_fn(layer_idx, fn, x)`` lets the distributed pipeline place
+    each layer on a stage; identity by default.
+    """
+    x = inputs
+    for i, p in enumerate(params_list):
+        run = functools.partial(dynamic_rnn, p, hidden=hidden,
+                                save_policy=save_policy)
+        if stage_fn is not None:
+            x = stage_fn(i, lambda xx: run(xx)[0], x)
+        else:
+            x, _ = run(x)
+    return x

@@ -1,0 +1,363 @@
+"""State-space blocks: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+The selective scan *is* a dynamic recurrence — the class of computation
+the paper's loop machinery exists for — and the TPU adaptation follows
+DESIGN.md §2: instead of a CUDA kernel holding state in SRAM, training
+uses a **chunked formulation**: an outer ``lax.scan`` over sequence
+chunks carries the (B, d_inner, N) state in HBM once per chunk, and the
+intra-chunk work is either an associative scan (mamba1, exact for
+diagonal per-channel decay) or the SSD block decomposition (mamba2,
+matmul-shaped for the MXU). ``repro.kernels.selective_scan`` is the
+Pallas fast path for the mamba1 inner recurrence.
+
+Decode is a single-step state update (O(1) in sequence length) — this is
+why the SSM/hybrid archs are the ones that run the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist import sharding as sh
+from . import layers
+
+
+# =========================== Mamba-1 =======================================
+
+def mamba1_params(b, cfg):
+    d, s = cfg.d_model, cfg.ssm
+    di = s.expand * d
+    dt_rank = max(1, math.ceil(d / 16))
+    return {
+        "in_proj": b.p((d, 2 * di), (sh.EMBED, sh.INNER)),
+        "conv_w": b.p((s.d_conv, di), (None, sh.INNER), init="normal",
+                      scale=0.2),
+        "conv_b": b.p((di,), (sh.INNER,), init="zeros"),
+        "x_proj": b.p((di, dt_rank + 2 * s.d_state), (sh.INNER, None)),
+        "dt_proj": b.p((dt_rank, di), (None, sh.INNER)),
+        "dt_bias": b.p((di,), (sh.INNER,), init="zeros"),
+        "A_log": b.p((di, s.d_state), (sh.INNER, sh.STATE), init="normal",
+                     scale=0.5),
+        "D_skip": b.p((di,), (sh.INNER,), init="ones"),
+        "out_proj": b.p((di, d), (sh.INNER, sh.EMBED)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via K shifted adds. x: (B,S,Di); w: (K,Di)."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for j in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[K - 1 - j]
+    return out + b
+
+
+def _conv_step(conv_state, x_t, w, b):
+    """conv_state: (B, K-1, Di); x_t: (B, Di). Returns (new_state, y)."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,K,Di)
+    y = jnp.einsum("bkd,kd->bd", window, w) + b
+    return window[:, 1:], y
+
+
+def _ssm_inputs_m1(p, x, cfg):
+    """Shared preamble: conv'd activations and (dt, B, C) projections."""
+    s = cfg.ssm
+    dt_rank = p["dt_proj"].shape[0]
+    dbc = jnp.einsum("...d,dn->...n", x, p["x_proj"].astype(x.dtype))
+    dt_low, B_, C_ = jnp.split(dbc, [dt_rank, dt_rank + s.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,rd->...d", dt_low, p["dt_proj"].astype(x.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return dt, B_.astype(jnp.float32), C_.astype(jnp.float32)
+
+
+def mamba1_forward(p: Dict, x: jax.Array, cfg, rules=None,
+                   return_state: bool = False):
+    """Full-sequence mamba1 mixer. x: (B, S, D) -> (B, S, D)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    cdt = cfg.dtype("compute")
+    Q = min(s.chunk, S)
+    if S % Q != 0:
+        Q = S  # odd lengths (tests/short prompts): single chunk
+    nc = S // Q
+
+    xz = jnp.einsum("bsd,de->bse", x.astype(cdt), p["in_proj"].astype(cdt))
+    xs_pre, z = jnp.split(xz, 2, axis=-1)
+    xs_pre = sh.constrain(xs_pre, rules, (sh.BATCH, None, sh.INNER))
+    xs = jax.nn.silu(_causal_conv(xs_pre, p["conv_w"].astype(cdt),
+                                  p["conv_b"].astype(cdt)))
+
+    dt, B_, C_ = _ssm_inputs_m1(p, xs, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # (Di, N)
+
+    Di, N = A.shape
+
+    SUB = 8  # sub-block length for the blocked scan
+
+    def chunk_step(h, args):
+        """h: (B, Di, N) carried chunk-boundary state.
+
+        Blocked (Blelloch-style) scan, chosen over
+        ``lax.associative_scan`` after profiling (§Perf): the generic
+        scan tree costs ~40 traversals of the (B, Q, Di, N) stream per
+        chunk (measured 42 GB/exec on falcon-mamba train_4k); here the
+        8-step intra-sub-block recurrences unroll into single fused
+        elementwise chains (register-resident partials, ~1 traversal
+        each) and the combine tree runs on an 8x smaller stream.
+        """
+        xs_c, dt_c, B_c, C_c = args                      # (B, Q, ...)
+        if s.scan_impl == "kernel":
+            # Pallas selective-scan: state resident in VMEM across the
+            # chunk (the §Perf kernel-mode path; interpret on CPU).
+            from ..kernels.selective_scan.ops import selective_scan
+            y, h_new = selective_scan(
+                dt_c, A, B_c, C_c, xs_c.astype(jnp.float32), h)
+            return h_new, y
+        sdt = jnp.dtype(s.scan_dtype)
+        q = xs_c.shape[1]
+        dA = jnp.exp(dt_c[..., None] * A).astype(sdt)    # (B,Q,Di,N)
+        dBx = ((dt_c * xs_c.astype(jnp.float32))[..., None]
+               * B_c[:, :, None, :]).astype(sdt)
+        if q % SUB != 0 or s.scan_impl == "assoc":
+            # small odd chunks (tests): plain associative scan
+            a_cum, b_cum = jax.lax.associative_scan(
+                lambda l, r: (r[0] * l[0], r[0] * l[1] + r[1]),
+                (dA, dBx), axis=1)
+            h_all = (a_cum.astype(jnp.float32) * h[:, None]
+                     + b_cum.astype(jnp.float32))
+            y = jnp.einsum("bqdn,bqn->bqd", h_all, C_c)
+            return h_all[:, -1], y
+
+        nb = q // SUB
+        dA_b = dA.reshape(*dA.shape[:1], nb, SUB, *dA.shape[2:])
+        dBx_b = dBx.reshape(*dBx.shape[:1], nb, SUB, *dBx.shape[2:])
+
+        # pass 1: per-sub-block (prod of decays, decay-weighted input sum)
+        # — unrolled; partials stay in registers inside one fused kernel.
+        a_blk = dA_b[:, :, 0]
+        b_blk = dBx_b[:, :, 0]
+        for t in range(1, SUB):
+            a_t = dA_b[:, :, t]
+            b_blk = a_t * b_blk + dBx_b[:, :, t]
+            a_blk = a_t * a_blk
+        # pass 2: exclusive scan over nb sub-block summaries (8x smaller)
+        a_cum, b_cum = jax.lax.associative_scan(
+            lambda l, r: (r[0] * l[0], r[0] * l[1] + r[1]),
+            (a_blk, b_blk), axis=1)
+        # entry state of each sub-block
+        h0f = h[:, None].astype(jnp.float32)
+        h_in = jnp.concatenate(
+            [h0f,
+             a_cum[:, :-1].astype(jnp.float32) * h0f
+             + b_cum[:, :-1].astype(jnp.float32)], axis=1)  # (B,nb,Di,N)
+        # pass 3: reconstruct h within each sub-block as ONE fused
+        # unrolled chain writing h_all once, then a single einsum for y
+        # (a per-step einsum splits the chain into 8 dot kernels and
+        # re-materializes h_t between them — measured worse, §Perf).
+        hs = []
+        h_t = h_in.astype(jnp.float32)
+        for t in range(SUB):
+            h_t = (dA_b[:, :, t].astype(jnp.float32) * h_t
+                   + dBx_b[:, :, t].astype(jnp.float32))
+            hs.append(h_t)
+        h_all = jnp.stack(hs, axis=2)                     # (B,nb,SUB,Di,N)
+        h_all = h_all.reshape(h_all.shape[0], q, *h_all.shape[3:])
+        y = jnp.einsum("bqdn,bqn->bqd", h_all, C_c.astype(jnp.float32))
+        h_last = (a_cum[:, -1].astype(jnp.float32) * h[:, None, ...][:, 0]
+                  + b_cum[:, -1].astype(jnp.float32))
+        return h_last, y
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(B, nc, Q, *t.shape[2:]), 1, 0)
+
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    h_last, ys = jax.lax.scan(
+        chunk_step, h0, (to_chunks(xs), to_chunks(dt), to_chunks(B_),
+                         to_chunks(C_)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, Di)
+    y = y + p["D_skip"].astype(jnp.float32) * xs.astype(jnp.float32)
+    y = (y.astype(cdt) * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cdt))
+    out = out.astype(x.dtype)
+    if return_state:
+        K = cfg.ssm.d_conv
+        pad = jnp.pad(xs_pre, ((0, 0), (K - 1, 0), (0, 0)))
+        state = {"conv": pad[:, -(K - 1):].astype(cdt), "h": h_last}
+        return out, state
+    return out
+
+
+def mamba1_init_state(cfg, batch: int):
+    s = cfg.ssm
+    di = cfg.d_inner
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di), cfg.dtype("compute")),
+        "h": jnp.zeros((batch, di, s.d_state), jnp.float32),
+    }
+
+
+def mamba1_step(p: Dict, x_t: jax.Array, state: Dict, cfg
+                ) -> Tuple[jax.Array, Dict]:
+    """Single decode step. x_t: (B, D) -> (y, new_state)."""
+    cdt = cfg.dtype("compute")
+    xz = jnp.einsum("bd,de->be", x_t.astype(cdt), p["in_proj"].astype(cdt))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_new, xs = _conv_step(state["conv"], xs, p["conv_w"].astype(cdt),
+                              p["conv_b"].astype(cdt))
+    xs = jax.nn.silu(xs)
+    dt, B_, C_ = _ssm_inputs_m1(p, xs, cfg)              # (B,Di),(B,N),(B,N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[..., None] * A)                      # (B,Di,N)
+    dBx = (dt * xs.astype(jnp.float32))[..., None] * B_[:, None, :]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_)
+    y = y + p["D_skip"].astype(jnp.float32) * xs.astype(jnp.float32)
+    y = y.astype(cdt) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"].astype(cdt))
+    return out.astype(x_t.dtype), {"conv": conv_new, "h": h}
+
+
+# =========================== Mamba-2 (SSD) =================================
+
+def mamba2_params(b, cfg):
+    d, s = cfg.d_model, cfg.ssm
+    di = s.expand * d
+    H = di // s.head_dim
+    N = s.d_state
+    conv_dim = di + 2 * N
+    return {
+        "in_proj": b.p((d, 2 * di + 2 * N + H), (sh.EMBED, sh.INNER)),
+        "conv_w": b.p((s.d_conv, conv_dim), (None, sh.INNER), init="normal",
+                      scale=0.2),
+        "conv_b": b.p((conv_dim,), (sh.INNER,), init="zeros"),
+        "A_log": b.p((H,), (None,), init="normal", scale=0.5),
+        "dt_bias": b.p((H,), (None,), init="zeros"),
+        "D_skip": b.p((H,), (None,), init="ones"),
+        "norm_w": b.p((di,), (sh.INNER,), init="ones"),
+        "out_proj": b.p((di, d), (sh.INNER, sh.EMBED)),
+    }
+
+
+def _split_m2(p, zxbcdt, cfg):
+    s = cfg.ssm
+    di = cfg.d_inner
+    N = s.d_state
+    z, xBC, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    return z, xBC, dt_raw
+
+
+def mamba2_forward(p: Dict, x: jax.Array, cfg, rules=None,
+                   return_state: bool = False):
+    """SSD chunked algorithm. x: (B, S, D) -> (B, S, D)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    cdt = cfg.dtype("compute")
+    di = cfg.d_inner
+    P = s.head_dim
+    H = di // P
+    N = s.d_state
+    Q = min(s.chunk, S)
+    if S % Q != 0:
+        Q = S  # odd lengths (tests/short prompts): single chunk
+    nc = S // Q
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x.astype(cdt), p["in_proj"].astype(cdt))
+    z, xBC_pre, dt_raw = _split_m2(p, zxbcdt, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC_pre, p["conv_w"].astype(cdt),
+                                   p["conv_b"].astype(cdt)))
+    xs, B_, C_ = jnp.split(xBC, [di, di + N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,)
+    la = dt * A                                               # (B,S,H) log-decay
+    Bf = B_.astype(jnp.float32)
+    Cf = C_.astype(jnp.float32)
+    xf = xs.astype(jnp.float32)
+    dtx = dt[..., None] * xf                                  # (B,S,H,P)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(B, nc, Q, *t.shape[2:]), 1, 0)
+
+    def chunk_step(h, args):
+        """h: (B,H,P,N). SSD block decomposition for one chunk."""
+        la_c, B_c, C_c, dtx_c = args   # (B,Q,H) (B,Q,N) (B,Q,N) (B,Q,H,P)
+        cum = jnp.cumsum(la_c, axis=1)                        # (B,Q,H)
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]        # (B,Q,Q,H)
+        iq = jnp.arange(Q)
+        causal = iq[:, None] >= iq[None, :]
+        L = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        sc = jnp.einsum("bin,bjn->bij", C_c, B_c)             # (B,Q,Q)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", sc, L, dtx_c)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", C_c, h, jnp.exp(cum))
+        # next state: decay-to-end weighted outer products + decayed h
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)             # (B,Q,H)
+        h_new = (jnp.exp(cum[:, -1])[..., None, None] * h
+                 + jnp.einsum("bjh,bjn,bjhp->bhpn", decay_end, B_c, dtx_c))
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_step, h0,
+                         (to_chunks(la), to_chunks(Bf), to_chunks(Cf),
+                          to_chunks(dtx)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    y = y + p["D_skip"].astype(jnp.float32)[:, None] * xf
+    y = y.reshape(B, S, di).astype(cdt) * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y.astype(cdt), p["out_proj"].astype(cdt))
+    out = out.astype(x.dtype)
+    if return_state:
+        K = s.d_conv
+        pad = jnp.pad(xBC_pre, ((0, 0), (K - 1, 0), (0, 0)))
+        state = {"conv": pad[:, -(K - 1):].astype(cdt), "h": h_last}
+        return out, state
+    return out
+
+
+def mamba2_init_state(cfg, batch: int):
+    s = cfg.ssm
+    di = cfg.d_inner
+    H = di // s.head_dim
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * s.d_state),
+                          cfg.dtype("compute")),
+        "h": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba2_step(p: Dict, x_t: jax.Array, state: Dict, cfg
+                ) -> Tuple[jax.Array, Dict]:
+    """Single decode step. x_t: (B, D)."""
+    s = cfg.ssm
+    cdt = cfg.dtype("compute")
+    di = cfg.d_inner
+    P = s.head_dim
+    H = di // P
+    N = s.d_state
+    zxbcdt = jnp.einsum("bd,de->be", x_t.astype(cdt), p["in_proj"].astype(cdt))
+    z, xBC, dt_raw = _split_m2(p, zxbcdt, cfg)
+    conv_new, xBC = _conv_step(state["conv"], xBC, p["conv_w"].astype(cdt),
+                               p["conv_b"].astype(cdt))
+    xBC = jax.nn.silu(xBC)
+    xs, B_, C_ = jnp.split(xBC, [di, di + N], axis=-1)
+    xs = xs.reshape(-1, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                      # (B,H)
+    h = (dA[..., None, None] * state["h"]
+         + jnp.einsum("bn,bhp,bh->bhpn", B_.astype(jnp.float32), xs, dt))
+    y = jnp.einsum("bn,bhpn->bhp", C_.astype(jnp.float32), h)
+    y = y + p["D_skip"].astype(jnp.float32)[:, None] * xs
+    y = y.reshape(-1, di).astype(cdt) * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["norm_w"])
+    out = jnp.einsum("be,ed->bd", y.astype(cdt), p["out_proj"].astype(cdt))
+    return out.astype(x_t.dtype), {"conv": conv_new, "h": h}

@@ -1,0 +1,370 @@
+"""Decoder-only LM runner for dense / MoE / SSM / hybrid / VLM families.
+
+Layer stacking: homogeneous blocks are stored with a leading ``layers``
+dim and driven by one of three loop strategies (``cfg.layer_loop``):
+
+- ``scan``        — ``lax.scan`` over stacked params (production default;
+                    compile-time O(1) in depth).
+- ``paper_while`` — ``repro.core.while_loop``: the paper's dynamic loop
+                    hosting the production model; its stack-saving AD
+                    (and ``save_policy="offload"`` host swapping, §5.3)
+                    applies to the layer activations.
+- ``unroll``      — static unrolling (the paper's Fig. 14 baseline).
+
+All three produce identical math; tests assert gradient agreement.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from .. import core
+from ..dist import sharding as sh
+from . import attention as attn_lib
+from . import layers, moe as moe_lib, ssm as ssm_lib
+
+
+# =========================== parameters ====================================
+
+def attn_params(b, cfg, d_model: int):
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": b.p((d_model, H, hd), (sh.EMBED, sh.HEADS, sh.HEAD_DIM)),
+        "wk": b.p((d_model, KV, hd), (sh.EMBED, sh.KV_HEADS, sh.HEAD_DIM)),
+        "wv": b.p((d_model, KV, hd), (sh.EMBED, sh.KV_HEADS, sh.HEAD_DIM)),
+        "wo": b.p((H, hd, d_model), (sh.HEADS, sh.HEAD_DIM, sh.EMBED),
+                  fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = b.p((H, hd), (sh.HEADS, sh.HEAD_DIM), init="zeros")
+        p["bk"] = b.p((KV, hd), (sh.KV_HEADS, sh.HEAD_DIM), init="zeros")
+        p["bv"] = b.p((KV, hd), (sh.KV_HEADS, sh.HEAD_DIM), init="zeros")
+    return p
+
+
+def mlp_params(b, cfg, d_model: int, d_ff: int):
+    return {
+        "w_gate": b.p((d_model, d_ff), (sh.EMBED, sh.MLP)),
+        "w_up": b.p((d_model, d_ff), (sh.EMBED, sh.MLP)),
+        "w_down": b.p((d_ff, d_model), (sh.MLP, sh.EMBED), fan_in=d_ff),
+    }
+
+
+def _attn_block_params(b, cfg):
+    p = {}
+    p.update(layers.norm_params(b, cfg.norm, cfg.d_model, "ln_attn"))
+    p.update({"attn": attn_params(b, cfg, cfg.d_model)})
+    p.update(layers.norm_params(b, cfg.norm, cfg.d_model, "ln_mlp"))
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.moe_params(b, cfg, cfg.d_model)
+    else:
+        p["mlp"] = mlp_params(b, cfg, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _ssm_block_params(b, cfg):
+    p = {}
+    p.update(layers.norm_params(b, cfg.norm, cfg.d_model, "ln"))
+    if cfg.ssm.kind == "mamba1":
+        p["ssm"] = ssm_lib.mamba1_params(b, cfg)
+    else:
+        p["ssm"] = ssm_lib.mamba2_params(b, cfg)
+    return p
+
+
+class _StackedBuilder:
+    """Wrap a Builder so every param gains a leading (layers,) dim."""
+
+    def __init__(self, b, n: int):
+        self._b, self._n = b, n
+
+    def p(self, shape, axes, **kw):
+        return self._b.p((self._n, *shape), (sh.LAYERS, *axes), **kw)
+
+
+def build_params(cfg, b):
+    """Structure function used for init / abstract / axes (see params.py)."""
+    Vp, D, L = cfg.padded_vocab, cfg.d_model, cfg.n_layers
+    p: Dict[str, Any] = {
+        "embed": b.p((Vp, D), (sh.VOCAB, sh.EMBED), init="normal", scale=0.02),
+    }
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["layers"] = _attn_block_params(_StackedBuilder(b, L), cfg)
+    elif cfg.family == "ssm":
+        p["layers"] = _ssm_block_params(_StackedBuilder(b, L), cfg)
+    elif cfg.family == "hybrid":
+        p["layers"] = _ssm_block_params(_StackedBuilder(b, L), cfg)
+        p["shared_attn"] = _attn_block_params(b, cfg)   # ONE shared block
+    else:
+        raise ValueError(f"build_params: family {cfg.family}")
+    p.update(layers.norm_params(b, cfg.norm, D, "ln_final"))
+    if not cfg.tie_embeddings:
+        p["unembed"] = b.p((D, Vp), (sh.EMBED, sh.VOCAB), init="normal",
+                           scale=0.02)
+    return p
+
+
+# =========================== attention block ================================
+
+def attn_apply(p, x, cfg, rules, *, positions, mode: str = "full",
+               kv_cache=None, cur_len=None):
+    """mode: full | prefill | decode. Returns (out, new_kv | None)."""
+    cdt = cfg.dtype("compute")
+    xc = x.astype(cdt)
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", xc, p["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+
+    # Sequence-parallel attention (DESIGN.md: head-count fallback): q's
+    # S dim shards over `model`; K/V replicate (one all-gather); the
+    # online-softmax loop then runs with zero internal collectives.
+    seq_tp = (rules is not None
+              and rules.mesh_axes(sh.ATTN_SEQ) is not None
+              and mode in ("full", "prefill") and q.shape[1] > 1)
+    if seq_tp:
+        q = sh.constrain(q, rules, (sh.BATCH, sh.ATTN_SEQ, None, None))
+        k = sh.constrain(k, rules, (sh.BATCH, None, None, None))
+        v = sh.constrain(v, rules, (sh.BATCH, None, None, None))
+        q_chunk_eff = q.shape[1]        # single q block; GSPMD splits S
+    else:
+        q_chunk_eff = cfg.attn_q_chunk
+
+    new_kv = None
+    use_pallas = (cfg.attn_impl == "pallas" and not seq_tp
+                  and mode == "full"
+                  and q.shape[1] % 128 == 0 and k.shape[1] % 128 == 0)
+    if mode == "full":
+        if use_pallas:
+            from ..kernels.flash_attention.ops import flash_attention
+            out = flash_attention(q, k, v, causal=True)
+        else:
+            out = attn_lib.chunked_attention(
+                q, k, v, causal=True, q_chunk=q_chunk_eff,
+                k_chunk=cfg.attn_k_chunk,
+                skip_masked_blocks=(cfg.attn_skip_masked_blocks
+                                    and not seq_tp))
+    elif mode == "prefill":
+        S = x.shape[1]
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), 0, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), 0, axis=1)
+        new_kv = {"k": kc, "v": vc}
+        out = attn_lib.chunked_attention(
+            q, k, v, causal=True, q_chunk=q_chunk_eff,
+            k_chunk=cfg.attn_k_chunk,
+            skip_masked_blocks=(cfg.attn_skip_masked_blocks
+                                and not seq_tp))
+    elif mode == "decode":
+        pos = cur_len - 1  # position of the incoming token
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), pos, axis=1)
+        new_kv = {"k": kc, "v": vc}
+        out = attn_lib.decode_attention(q, kc, vc, cur_len=cur_len)
+    else:
+        raise ValueError(mode)
+
+    if seq_tp:
+        out = sh.constrain(out, rules, (sh.BATCH, sh.ATTN_SEQ, None, None))
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(cdt), p["wo"].astype(cdt))
+    out = out.astype(x.dtype)
+    if seq_tp:
+        out = sh.constrain(out, rules, (sh.BATCH, None, None))
+    return out, new_kv
+
+
+def attn_block(p, x, cfg, rules, *, positions, mode="full", kv_cache=None,
+               cur_len=None):
+    """Pre-norm attention + (MoE|MLP) block. Returns (x, new_kv, aux)."""
+    h = layers.apply_norm(cfg.norm, x, p, "ln_attn")
+    a, new_kv = attn_apply(p["attn"], h, cfg, rules, positions=positions,
+                           mode=mode, kv_cache=kv_cache, cur_len=cur_len)
+    a = checkpoint_name(a, "attn_out")
+    x = x + a
+    h = layers.apply_norm(cfg.norm, x, p, "ln_mlp")
+    if cfg.family == "moe":
+        m, aux = moe_lib.moe_mlp(p["moe"], h, cfg, rules)
+    else:
+        m = layers.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                          p["mlp"]["w_down"], cfg.dtype("compute"))
+        aux = {}
+    x = x + m.astype(x.dtype)
+    x = sh.constrain(x, rules, (sh.BATCH, None, None))
+    return x, new_kv, aux
+
+
+def ssm_block(p, x, cfg, rules, *, mode="full", state=None):
+    """Pre-norm mamba block. Returns (x, new_state)."""
+    h = layers.apply_norm(cfg.norm, x, p, "ln")
+    if mode == "full":
+        fwd = (ssm_lib.mamba1_forward if cfg.ssm.kind == "mamba1"
+               else ssm_lib.mamba2_forward)
+        y = fwd(p["ssm"], h, cfg, rules)
+        new_state = None
+    else:  # decode: single token
+        step = (ssm_lib.mamba1_step if cfg.ssm.kind == "mamba1"
+                else ssm_lib.mamba2_step)
+        y, new_state = step(p["ssm"], h[:, 0], state, cfg)
+        y = y[:, None]
+    x = x + y
+    x = sh.constrain(x, rules, (sh.BATCH, None, None))
+    return x, new_state
+
+
+# =========================== layer loops ====================================
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if cfg.remat == "attn_out":
+        # selective: save only the (tagged) attention outputs — skips
+        # recomputing attention in backward at a bf16 (B,S,D)/layer cost,
+        # while the MLP still rematerializes (§Perf iteration 14).
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out"))
+    return jax.checkpoint(fn)  # "full": save only block inputs
+
+
+def _run_layers(stacked, x, cfg, rules, block_fn, aux0):
+    """Drive the homogeneous layer stack per cfg.layer_loop.
+
+    block_fn(layer_params, x) -> (x, aux_delta)
+
+    The inter-block residual stream is stored SEQUENCE-SHARDED over the
+    `model` axis (Korthikanti-style sequence parallelism): the layer
+    loop's saved/offloaded per-layer activation is 1/model_size of the
+    bytes; the all-gather back to full S happens inside the rematted
+    step, so backward recompute re-gathers instead of re-storing.
+    """
+
+    def step(carry, lp):
+        x, aux = carry
+        x = sh.constrain(x, rules, (sh.BATCH, None, None))
+        x, d = block_fn(lp, x)
+        x = sh.constrain(x, rules, (sh.BATCH, sh.ACT_SEQ, None))
+        return (x, jax.tree.map(jnp.add, aux, d)), None
+
+    step = _remat(step, cfg)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+
+    x = sh.constrain(x, rules, (sh.BATCH, sh.ACT_SEQ, None))
+    if cfg.layer_loop == "scan":
+        (x, aux), _ = jax.lax.scan(step, (x, aux0), stacked)
+        x = sh.constrain(x, rules, (sh.BATCH, None, None))
+        return x, aux
+    if cfg.layer_loop == "paper_while":
+        def body(i, carry):
+            lp = jax.tree.map(lambda a: a[i], stacked)
+            return step(carry, lp)[0]
+        offl = None
+        if rules is not None and rules.mesh is not None and \
+                cfg.save_policy in ("offload", "carry_offload"):
+            offl = (rules.sharding((sh.BATCH, sh.ACT_SEQ, None)),
+                    jax.tree.map(lambda _: rules.sharding(()), aux0))
+        x, aux = core.fori_loop(0, n, body, (x, aux0),
+                                save_policy=cfg.save_policy,
+                                offload_shardings=offl)
+        return sh.constrain(x, rules, (sh.BATCH, None, None)), aux
+    if cfg.layer_loop == "unroll":
+        carry = (x, aux0)
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], stacked)
+            carry = step(carry, lp)[0]
+        x, aux = carry
+        return sh.constrain(x, rules, (sh.BATCH, None, None)), aux
+    raise ValueError(cfg.layer_loop)
+
+
+# =========================== forward passes =================================
+
+def _embed_tokens(p, tokens, cfg, rules, prefix_embeds=None):
+    cdt = cfg.dtype("compute")
+    x = jnp.take(p["embed"].astype(cdt), tokens, axis=0)
+    if prefix_embeds is not None:  # VLM: prepend patch embeddings
+        x = jnp.concatenate([prefix_embeds.astype(cdt), x], axis=1)
+    return sh.constrain(x, rules, (sh.BATCH, None, None))
+
+
+def _hybrid_layers(p, x, cfg, rules, block_kw=None):
+    """zamba2: shared attn block every k mamba2 layers (DESIGN.md §9)."""
+    k = cfg.shared_attn_every
+    L = cfg.n_layers
+    aux: Dict[str, jax.Array] = {}
+    positions = jnp.arange(x.shape[1])[None]
+    n_apps = 0
+    for start in range(0, L, k):
+        x, _, _ = attn_block(p["shared_attn"], x, cfg, rules,
+                             positions=positions, mode="full")
+        n_apps += 1
+        seg = jax.tree.map(lambda a: a[start:min(start + k, L)], p["layers"])
+
+        def block_fn(lp, xx):
+            return ssm_block(lp, xx, cfg, rules, mode="full")[0], {}
+
+        x, _ = _run_layers(seg, x, cfg, rules, block_fn, {})
+    return x, aux
+
+
+def forward_features(params, cfg, tokens, *, rules=None, prefix_embeds=None
+                     ) -> Tuple[jax.Array, Dict]:
+    """Backbone + final norm, NO unembed. Returns (features, aux).
+
+    Training uses this + a chunked unembed/CE (model_zoo._chunked_ce) so
+    the (B, S, V) fp32 logits are never materialized whole.
+    """
+    x = _embed_tokens(params, tokens, cfg, rules, prefix_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None]
+
+    if cfg.family == "hybrid":
+        x, aux = _hybrid_layers(params, x, cfg, rules)
+    elif cfg.family == "ssm":
+        def block_fn(lp, xx):
+            return ssm_block(lp, xx, cfg, rules, mode="full")[0], {}
+        x, aux = _run_layers(params["layers"], x, cfg, rules, block_fn, {})
+    else:
+        aux0 = ({"moe_load_balance": jnp.float32(0.0),
+                 "moe_z_loss": jnp.float32(0.0)}
+                if cfg.family == "moe" else {})
+
+        def block_fn(lp, xx):
+            xx, _, aux = attn_block(lp, xx, cfg, rules, positions=positions,
+                                    mode="full")
+            return xx, aux
+        x, aux = _run_layers(params["layers"], x, cfg, rules, block_fn, aux0)
+
+    return layers.apply_norm(cfg.norm, x, params, "ln_final"), aux
+
+
+def unembed_weight(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def forward(params, cfg, tokens, *, rules=None, prefix_embeds=None
+            ) -> Tuple[jax.Array, Dict]:
+    """Full-sequence forward (evaluation / tests). Returns (logits, aux)."""
+    x, aux = forward_features(params, cfg, tokens, rules=rules,
+                              prefix_embeds=prefix_embeds)
+    cdt = cfg.dtype("compute")
+    w = unembed_weight(params, cfg).astype(cdt)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(cdt), w)
+    logits = sh.constrain(logits, rules, (sh.BATCH, None, sh.VOCAB))
+    return logits, aux

@@ -1,0 +1,34 @@
+"""LR schedules (warmup + cosine/linear), as step -> multiplier fns."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_linear(warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        lin = 1.0 - (1.0 - final_frac) * jnp.clip(t, 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, lin)
+    return fn
+
+
+def constant():
+    def fn(step):
+        return jnp.ones((), jnp.float32)
+    return fn

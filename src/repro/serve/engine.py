@@ -1,0 +1,354 @@
+"""Serving engine: caches, prefill, single-token decode, and an
+**in-graph generation loop** (``generate``) built on the paper's
+dynamic control flow — the decode loop is a ``repro.core.while_loop``
+with a data-dependent EOS early-exit, the inference-side counterpart of
+the paper's §2.2 applications ("the entire computation stays inside the
+system runtime").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import core
+from ..configs import ModelConfig
+from ..dist import sharding as sh
+from ..models import encdec, layers, ssm as ssm_lib, transformer
+
+
+# =========================== cache construction =============================
+
+def _kv_struct(cfg, n: int, batch: int, max_len: int, mode: str):
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (n, batch, max_len, KV, hd)
+    axes = (sh.LAYERS, sh.BATCH, None, sh.CACHE_KV, sh.CACHE_HD)
+    if mode == "abstract":
+        e = jax.ShapeDtypeStruct(shape, cfg.dtype("compute"))
+        return {"k": e, "v": e}
+    if mode == "axes":
+        return {"k": axes, "v": axes}
+    z = jnp.zeros(shape, cfg.dtype("compute"))
+    return {"k": z, "v": z}
+
+
+def _ssm_struct(cfg, batch: int, mode: str):
+    s = cfg.ssm
+    L = cfg.n_layers
+    di = cfg.d_inner
+    if s.kind == "mamba1":
+        conv_shape = (L, batch, s.d_conv - 1, di)
+        h_shape = (L, batch, di, s.d_state)
+        h_axes = (sh.LAYERS, sh.BATCH, sh.INNER, sh.STATE)
+    else:
+        H = di // s.head_dim
+        conv_shape = (L, batch, s.d_conv - 1, di + 2 * s.d_state)
+        h_shape = (L, batch, H, s.head_dim, s.d_state)
+        h_axes = (sh.LAYERS, sh.BATCH, sh.INNER, None, sh.STATE)
+    conv_axes = (sh.LAYERS, sh.BATCH, None, sh.INNER)
+    if mode == "abstract":
+        return {"conv": jax.ShapeDtypeStruct(conv_shape, cfg.dtype("compute")),
+                "h": jax.ShapeDtypeStruct(h_shape, jnp.float32)}
+    if mode == "axes":
+        return {"conv": conv_axes, "h": h_axes}
+    return {"conv": jnp.zeros(conv_shape, cfg.dtype("compute")),
+            "h": jnp.zeros(h_shape, jnp.float32)}
+
+
+def _n_shared_apps(cfg) -> int:
+    return math.ceil(cfg.n_layers / cfg.shared_attn_every)
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               mode: str = "init") -> Any:
+    """mode: init (arrays) | abstract (ShapeDtypeStruct) | axes."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        n = cfg.n_layers
+        return {"attn": _kv_struct(cfg, n, batch, max_len, mode)}
+    if fam == "ssm":
+        return {"ssm": _ssm_struct(cfg, batch, mode)}
+    if fam == "hybrid":
+        return {"attn": _kv_struct(cfg, _n_shared_apps(cfg), batch, max_len,
+                                   mode),
+                "ssm": _ssm_struct(cfg, batch, mode)}
+    if fam == "audio":
+        KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        cross_shape = (cfg.n_layers, batch, cfg.n_frames, KV, hd)
+        cross_axes = (sh.LAYERS, sh.BATCH, None, sh.CACHE_KV, sh.CACHE_HD)
+        if mode == "abstract":
+            ce = jax.ShapeDtypeStruct(cross_shape, cfg.dtype("compute"))
+            cross = {"k": ce, "v": ce}
+        elif mode == "axes":
+            cross = {"k": cross_axes, "v": cross_axes}
+        else:
+            cz = jnp.zeros(cross_shape, cfg.dtype("compute"))
+            cross = {"k": cz, "v": cz}
+        return {"self": _kv_struct(cfg, cfg.n_layers, batch, max_len, mode),
+                "cross": cross}
+    raise ValueError(fam)
+
+
+# =========================== decode steps ===================================
+
+def _decode_attn_families(params, cfg, rules, x, cache, cur_len):
+    positions = jnp.full((1, 1), cur_len - 1, jnp.int32)
+
+    def f(carry, xs):
+        x = carry
+        lp, kv = xs
+        x, new_kv, _ = transformer.attn_block(
+            lp, x, cfg, rules, positions=positions, mode="decode",
+            kv_cache=kv, cur_len=cur_len)
+        return x, new_kv
+
+    x, new_attn = jax.lax.scan(f, x, (params["layers"], cache["attn"]))
+    return x, {"attn": new_attn}
+
+
+def _decode_ssm(params, cfg, rules, x, cache, cur_len):
+    def f(carry, xs):
+        x = carry
+        lp, st = xs
+        x, new_st = transformer.ssm_block(lp, x, cfg, rules, mode="decode",
+                                          state=st)
+        return x, new_st
+
+    x, new_ssm = jax.lax.scan(f, x, (params["layers"], cache["ssm"]))
+    return x, {"ssm": new_ssm}
+
+
+def _decode_hybrid(params, cfg, rules, x, cache, cur_len):
+    k = cfg.shared_attn_every
+    L = cfg.n_layers
+    positions = jnp.full((1, 1), cur_len - 1, jnp.int32)
+    new_attn = cache["attn"]
+    new_ssm = cache["ssm"]
+    for app, start in enumerate(range(0, L, k)):
+        kv = jax.tree.map(lambda a: a[app], cache["attn"])
+        x, nkv, _ = transformer.attn_block(
+            params["shared_attn"], x, cfg, rules, positions=positions,
+            mode="decode", kv_cache=kv, cur_len=cur_len)
+        new_attn = jax.tree.map(lambda full, n: full.at[app].set(n),
+                                new_attn, nkv)
+        stop = min(start + k, L)
+        seg_p = jax.tree.map(lambda a: a[start:stop], params["layers"])
+        seg_s = jax.tree.map(lambda a: a[start:stop], cache["ssm"])
+
+        def f(carry, xs):
+            x = carry
+            lp, st = xs
+            x, new_st = transformer.ssm_block(lp, x, cfg, rules,
+                                              mode="decode", state=st)
+            return x, new_st
+
+        x, seg_new = jax.lax.scan(f, x, (seg_p, seg_s))
+        new_ssm = jax.tree.map(
+            lambda full, n: jax.lax.dynamic_update_slice_in_dim(
+                full, n.astype(full.dtype), start, axis=0),
+            new_ssm, seg_new)
+    return x, {"attn": new_attn, "ssm": new_ssm}
+
+
+def _decode_audio(params, cfg, rules, x, cache, cur_len):
+    def f(carry, xs):
+        x = carry
+        lp, self_kv, cross_kv = xs
+        x, new_self = encdec._dec_block(
+            lp, x, cfg, rules, mode="decode", self_kv=self_kv,
+            cross_kv=cross_kv, cur_len=cur_len)
+        return x, new_self
+
+    x, new_self = jax.lax.scan(
+        f, x, (params["decoder"], cache["self"], cache["cross"]))
+    return x, {"self": new_self, "cross": cache["cross"]}
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Any,
+                cur_len, rules=None) -> Tuple[jax.Array, Any]:
+    """One new token against a cache of `cur_len - 1` previous positions.
+
+    token: (B, 1) int32. Returns (logits (B, 1, Vp), new_cache).
+    """
+    cdt = cfg.dtype("compute")
+    x = jnp.take(params["embed"].astype(cdt), token, axis=0)
+    x = sh.constrain(x, rules, (sh.BATCH, None, None))
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        x, new_cache = _decode_attn_families(params, cfg, rules, x, cache,
+                                             cur_len)
+    elif fam == "ssm":
+        x, new_cache = _decode_ssm(params, cfg, rules, x, cache, cur_len)
+    elif fam == "hybrid":
+        x, new_cache = _decode_hybrid(params, cfg, rules, x, cache, cur_len)
+    elif fam == "audio":
+        x = x + layers.sinusoid_at(cur_len - 1, cfg.d_model, cdt)
+        x, new_cache = _decode_audio(params, cfg, rules, x, cache, cur_len)
+    else:
+        raise ValueError(fam)
+
+    if fam == "audio":
+        x = layers.layer_norm(x, params["ln_final"], params["ln_final_b"])
+        w = params["embed"].astype(cdt).T
+    else:
+        x = layers.apply_norm(cfg.norm, x, params, "ln_final")
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["unembed"]).astype(cdt)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(cdt), w)
+    logits = sh.constrain(logits, rules, (sh.BATCH, None, sh.VOCAB))
+    return logits, new_cache
+
+
+# =========================== prefill ========================================
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
+            rules=None, prefix_embeds=None, frames=None
+            ) -> Tuple[jax.Array, Any]:
+    """Prime the cache with a full prompt; returns (logits, new_cache)."""
+    cdt = cfg.dtype("compute")
+    fam = cfg.family
+    x = jnp.take(params["embed"].astype(cdt), tokens, axis=0)
+    if fam == "vlm" and prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cdt), x], axis=1)
+    x = sh.constrain(x, rules, (sh.BATCH, None, None))
+    S = x.shape[1]
+    positions = jnp.arange(S)[None]
+
+    if fam in ("dense", "moe", "vlm"):
+        def f(carry, xs):
+            x = carry
+            lp, kv = xs
+            x, new_kv, _ = transformer.attn_block(
+                lp, x, cfg, rules, positions=positions, mode="prefill",
+                kv_cache=kv)
+            return x, new_kv
+        x, new_attn = jax.lax.scan(f, x, (params["layers"], cache["attn"]))
+        new_cache = {"attn": new_attn}
+    elif fam == "ssm":
+        def f(carry, lp):
+            x = carry
+            h = layers.apply_norm(cfg.norm, x, lp, "ln")
+            fwd = (ssm_lib.mamba1_forward if cfg.ssm.kind == "mamba1"
+                   else ssm_lib.mamba2_forward)
+            y, st = fwd(lp["ssm"], h, cfg, rules, return_state=True)
+            return x + y, st
+        x, new_ssm = jax.lax.scan(f, x, params["layers"])
+        new_cache = {"ssm": new_ssm}
+    elif fam == "hybrid":
+        k = cfg.shared_attn_every
+        L = cfg.n_layers
+        new_attn, new_ssm = cache["attn"], cache["ssm"]
+        for app, start in enumerate(range(0, L, k)):
+            kv = jax.tree.map(lambda a: a[app], cache["attn"])
+            x, nkv, _ = transformer.attn_block(
+                params["shared_attn"], x, cfg, rules, positions=positions,
+                mode="prefill", kv_cache=kv)
+            new_attn = jax.tree.map(lambda full, n: full.at[app].set(n),
+                                    new_attn, nkv)
+            stop = min(start + k, L)
+            seg_p = jax.tree.map(lambda a: a[start:stop], params["layers"])
+
+            def f(carry, lp):
+                x = carry
+                h = layers.apply_norm(cfg.norm, x, lp, "ln")
+                y, st = ssm_lib.mamba2_forward(lp["ssm"], h, cfg, rules,
+                                               return_state=True)
+                return x + y, st
+            x, seg_new = jax.lax.scan(f, x, seg_p)
+            new_ssm = jax.tree.map(
+                lambda full, n: jax.lax.dynamic_update_slice_in_dim(
+                    full, n.astype(full.dtype), start, axis=0),
+                new_ssm, seg_new)
+        new_cache = {"attn": new_attn, "ssm": new_ssm}
+    elif fam == "audio":
+        enc_out = encdec.encode(params, cfg, frames, rules)
+        cross = encdec.cross_kv(params, cfg, enc_out)
+        x = x + layers.sinusoidal_positions(S, cfg.d_model, cdt)
+
+        def f(carry, xs):
+            x = carry
+            lp, self_kv = xs
+            x, new_self = encdec._dec_block(
+                lp, x, cfg, rules, enc_out, mode="prefill", self_kv=self_kv)
+            return x, new_self
+        x, new_self = jax.lax.scan(f, x, (params["decoder"], cache["self"]))
+        new_cache = {"self": new_self, "cross": cross}
+    else:
+        raise ValueError(fam)
+
+    if fam == "audio":
+        x = layers.layer_norm(x, params["ln_final"], params["ln_final_b"])
+        w = params["embed"].astype(cdt).T
+    else:
+        x = layers.apply_norm(cfg.norm, x, params, "ln_final")
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["unembed"]).astype(cdt)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(cdt), w)
+    logits = sh.constrain(logits, rules, (sh.BATCH, None, sh.VOCAB))
+    return logits, new_cache
+
+
+# =========================== in-graph generation ============================
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: jax.Array        # (B, max_new)
+    lengths: jax.Array       # (B,)
+    steps: jax.Array         # scalar: loop iterations actually run
+
+    def tree_flatten(self):
+        return (self.tokens, self.lengths, self.steps), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, *, max_new: int,
+             eos_id: int = 1, rules=None, prefix_embeds=None, frames=None
+             ) -> GenerateResult:
+    """Greedy in-graph decode with EOS early exit (dynamic control flow).
+
+    The whole loop is one ``repro.core.while_loop``: the predicate is
+    data-dependent (all sequences hit EOS → exit early), which is
+    impossible with a fixed-length ``lax.scan`` — exactly the paper's
+    argument for in-graph dynamic control flow in inference.
+    """
+    B, S = prompt.shape
+    prefix = cfg.n_patches if (cfg.family == "vlm"
+                               and prefix_embeds is not None) else 0
+    max_len = S + prefix + max_new + 1
+    cache = make_cache(cfg, B, max_len)
+    logits, cache = prefill(params, cfg, prompt, cache, rules,
+                            prefix_embeds=prefix_embeds, frames=frames)
+    first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out_ta = core.TensorArray.create(max_new, (B,), jnp.int32)
+    done0 = jnp.zeros((B,), bool)
+    cur0 = jnp.asarray(S + prefix + 1, jnp.int32)
+
+    def cond_fn(state):
+        i, token, done, cur, cache, ta = state
+        return jnp.logical_not(jnp.all(done))
+
+    def body_fn(state):
+        i, token, done, cur, cache, ta = state
+        ta = ta.write(i, jnp.where(done, eos_id, token[:, 0]))
+        done = done | (token[:, 0] == eos_id)
+        logits, cache = decode_step(params, cfg, token, cache, cur, rules)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return (i + 1, nxt, done, cur + 1, cache, ta)
+
+    i, _, done, _, _, ta = core.while_loop(
+        cond_fn, body_fn, (jnp.asarray(0, jnp.int32), first, done0, cur0,
+                           cache, out_ta),
+        max_iters=max_new, name="generate")
+    toks = ta.stack().T                                  # (B, max_new)
+    has_eos = (toks == eos_id).any(axis=1)
+    first_eos = jnp.argmax(toks == eos_id, axis=1)
+    lengths = jnp.where(has_eos, first_eos + 1, toks.shape[1])
+    return GenerateResult(tokens=toks, lengths=lengths, steps=i)

@@ -1,0 +1,184 @@
+"""Training loop: step builder + fault-tolerant driver.
+
+Includes the paper's §2.2 "other usage": an **in-graph training loop** —
+k optimizer steps fused into one ``repro.core.while_loop`` invocation so
+workers "make progress on training independently, without synchronizing
+with the coordinator between steps" (the coordinator here being Python).
+
+Fault tolerance (DESIGN.md §8): auto-resume from the latest manifest,
+async checkpointing every N steps, SIGTERM → synchronous save → clean
+exit (preemption), per-step watchdog flags stragglers against an EWMA
+deadline, deterministic data replay from (seed, step, host).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import core
+from ..checkpointing import checkpoint as ckpt_lib
+from ..models import model_zoo
+from ..optim import adamw
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, rules=None,
+                    donate: bool = True) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    cfg.grad_accum > 1 splits the global batch into microbatches and
+    accumulates gradients with an in-graph counted loop (repro.core):
+    the per-device live activation working set scales 1/n_micro, which
+    is what lets dbrx-scale train_4k fit HBM (EXPERIMENTS.md §Perf).
+    """
+    n_micro = max(1, cfg.grad_accum)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(model_zoo.loss_fn, has_aux=True)(
+            params, cfg, batch, rules)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                    *x.shape[1:]), batch)
+
+            def body(i, acc):
+                gsum, lsum = acc
+                mb = jax.tree.map(lambda x: x[i], micro)
+                (loss, _), g = grads_of(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + loss)
+
+            gz = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, loss_sum = core.fori_loop(
+                0, n_micro, body, (gz, jnp.float32(0.0)))
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            metrics = {"loss": loss, "ce": loss}
+        params, opt_state, om = adamw.apply(opt_cfg, params, grads,
+                                            opt_state)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_in_graph_loop(cfg, opt_cfg: adamw.AdamWConfig, n_inner: int,
+                       rules=None) -> Callable:
+    """Fuse n_inner optimizer steps into one in-graph while_loop (§2.2).
+
+    batches: pytree stacked on a leading (n_inner, ...) dim, pre-staged
+    on device. One host→device dispatch per n_inner steps.
+    """
+    step_fn = make_train_step(cfg, opt_cfg, rules)
+
+    def loop(params, opt_state, batches):
+        def body(i, carry):
+            params, opt_state, _ = carry
+            batch = jax.tree.map(lambda x: x[i], batches)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            return (params, opt_state, metrics)
+
+        zero_metrics = jax.eval_shape(
+            lambda: step_fn(params, opt_state,
+                            jax.tree.map(lambda x: x[0], batches))[2])
+        zero_metrics = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                    zero_metrics)
+        return core.fori_loop(0, n_inner, body,
+                              (params, opt_state, zero_metrics))
+
+    return loop
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep_last: int = 3
+    straggler_factor: float = 3.0   # deadline = factor x EWMA step time
+    log_every: int = 10
+
+
+class Trainer:
+    """Fault-tolerant driver around a jitted train step."""
+
+    def __init__(self, step_fn: Callable, data_source, tcfg: TrainerConfig,
+                 log_fn: Callable[[str], None] = print):
+        self.step_fn = step_fn
+        self.data = data_source
+        self.tcfg = tcfg
+        self.log = log_fn
+        self.saver = ckpt_lib.AsyncSaver()
+        self._preempted = False
+        self._ewma: Optional[float] = None
+        self.straggler_steps: list = []
+
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:  # not on main thread (tests)
+            pass
+
+    def maybe_resume(self, params, opt_state, shardings=None
+                     ) -> Tuple[int, Any, Any]:
+        """Resume from the latest checkpoint if one exists."""
+        if not self.tcfg.ckpt_dir:
+            return 0, params, opt_state
+        step = ckpt_lib.latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return 0, params, opt_state
+        state = ckpt_lib.restore(self.tcfg.ckpt_dir, step,
+                                 {"params": params, "opt": opt_state},
+                                 shardings)
+        self.log(f"[trainer] resumed from step {step}")
+        return step, state["params"], state["opt"]
+
+    def run(self, params, opt_state, *, start_step: int = 0, steps: int = 100
+            ) -> Tuple[Any, Any, Dict]:
+        self._install_sigterm()
+        metrics = {}
+        step = start_step
+        for step in range(start_step, start_step + steps):
+            batch = self.data.batch_at(step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                      batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            # straggler watchdog (EWMA deadline)
+            if self._ewma is not None and \
+                    dt > self.tcfg.straggler_factor * self._ewma:
+                self.straggler_steps.append(step)
+                self.log(f"[watchdog] step {step} took {dt * 1e3:.1f}ms "
+                         f"(> {self.tcfg.straggler_factor:.1f}x EWMA "
+                         f"{self._ewma * 1e3:.1f}ms)")
+            self._ewma = dt if self._ewma is None else \
+                0.9 * self._ewma + 0.1 * dt
+            if step % self.tcfg.log_every == 0:
+                self.log(f"[trainer] step {step} "
+                         f"loss {float(metrics['loss']):.4f} "
+                         f"({dt * 1e3:.1f}ms)")
+            if self.tcfg.ckpt_dir and (step + 1) % self.tcfg.ckpt_every == 0:
+                self.saver.save_async(
+                    self.tcfg.ckpt_dir, step + 1,
+                    {"params": params, "opt": opt_state},
+                    keep_last=self.tcfg.keep_last)
+            if self._preempted:
+                self.log(f"[trainer] SIGTERM at step {step}; checkpointing")
+                self.saver.wait()
+                if self.tcfg.ckpt_dir:
+                    ckpt_lib.save(self.tcfg.ckpt_dir, step + 1,
+                                  {"params": params, "opt": opt_state},
+                                  keep_last=self.tcfg.keep_last)
+                break
+        self.saver.wait()
+        return params, opt_state, metrics

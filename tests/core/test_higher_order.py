@@ -1,0 +1,81 @@
+"""scan/map_fn/foldl/foldr (Fig. 2 construction) vs native + grads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import foldl, foldr, map_fn, scan
+
+
+class TestScan:
+    def test_matches_native(self):
+        xs = jnp.arange(6.0)
+        f = lambda c, x: c * 0.9 + x
+        np.testing.assert_allclose(
+            scan(f, xs, jnp.float32(0.0)),
+            scan(f, xs, jnp.float32(0.0), backend="native"), rtol=1e-6)
+
+    def test_prefix_sum_semantics(self):
+        """Fig. 2: result i = fn applied to elements 0..i."""
+        xs = jnp.arange(1.0, 5.0)
+        ys = scan(lambda c, x: c + x, xs, jnp.float32(0.0))
+        np.testing.assert_allclose(ys, np.cumsum(xs))
+
+    def test_reverse(self):
+        xs = jnp.arange(4.0)
+        ys = scan(lambda c, x: c + x, xs, jnp.float32(0.0), reverse=True)
+        np.testing.assert_allclose(ys[0], xs.sum())
+
+    def test_grad_matches_native(self):
+        xs = jnp.arange(6.0)
+
+        def loss(w, backend):
+            ys = scan(lambda c, x: jnp.tanh(c * w + x), xs,
+                      jnp.float32(0.0), backend=backend)
+            return ys.sum()
+
+        g_paper = jax.grad(lambda w: loss(w, "paper"))(jnp.float32(0.8))
+        g_native = jax.grad(lambda w: loss(w, "native"))(jnp.float32(0.8))
+        np.testing.assert_allclose(g_paper, g_native, rtol=1e-5)
+
+    def test_pytree_elems(self):
+        xs = {"a": jnp.arange(4.0), "b": jnp.ones((4, 2))}
+        ys = scan(lambda c, x: c + x["a"] + x["b"].sum(), xs,
+                  jnp.float32(0.0))
+        assert ys.shape == (4,)
+
+
+class TestFolds:
+    def test_foldl(self):
+        xs = jnp.arange(5.0)
+        out = foldl(lambda a, x: a * 0.5 + x, xs, jnp.float32(1.0))
+        ref = foldl(lambda a, x: a * 0.5 + x, xs, jnp.float32(1.0),
+                    backend="native")
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+    def test_foldr_order(self):
+        xs = jnp.arange(3.0)
+        # foldr: f(f(f(init, x2), x1), x0) with our right-to-left order
+        out = foldr(lambda a, x: a * 2.0 + x, xs, jnp.float32(0.0))
+        ref = foldr(lambda a, x: a * 2.0 + x, xs, jnp.float32(0.0),
+                    backend="native")
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+    def test_foldl_grad(self):
+        xs = jnp.arange(1.0, 5.0)
+        g = jax.grad(lambda xs: foldl(lambda a, x: a * x, xs,
+                                      jnp.float32(1.0)))(xs)
+        prod = np.prod(np.arange(1.0, 5.0))
+        np.testing.assert_allclose(g, prod / xs, rtol=1e-5)
+
+
+class TestMap:
+    def test_map(self):
+        xs = jnp.arange(5.0)
+        np.testing.assert_allclose(map_fn(lambda x: x * x, xs), xs * xs)
+
+    def test_map_grad(self):
+        xs = jnp.arange(5.0)
+        g = jax.grad(lambda xs: map_fn(lambda x: x ** 3, xs).sum())(xs)
+        np.testing.assert_allclose(g, 3 * xs ** 2)

@@ -1,0 +1,98 @@
+"""Fig. 5 evaluation-rule semantics for the five primitives."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (TaggedValue, apply_op, enter, exit_, merge,
+                        next_iteration, switch)
+from repro.core.frames import (ROOT_TAG, enter_tag, exit_tag, format_tag,
+                               next_iteration_tag)
+from repro.core.primitives import DeadnessError
+
+
+def live(v, tag=ROOT_TAG):
+    return TaggedValue(jnp.asarray(v), False, tag)
+
+
+class TestSwitch:
+    def test_true_routes_to_true_port(self):
+        d_false, d_true = switch(live(3.0), live(True))
+        assert d_false.is_dead and not d_true.is_dead
+        assert float(d_true.value) == 3.0
+
+    def test_false_routes_to_false_port(self):
+        d_false, d_true = switch(live(3.0), live(False))
+        assert not d_false.is_dead and d_true.is_dead
+
+    def test_dead_input_kills_both(self):
+        d_false, d_true = switch(live(1.0).dead(), live(True))
+        assert d_false.is_dead and d_true.is_dead
+
+    def test_dead_predicate_kills_both(self):
+        d_false, d_true = switch(live(1.0), live(True).dead())
+        assert d_false.is_dead and d_true.is_dead
+
+    def test_cross_frame_inputs_rejected(self):
+        with pytest.raises(DeadnessError):
+            switch(live(1.0, (("f", 0),)), live(True))
+
+
+class TestMerge:
+    def test_first_alive_wins(self):
+        out = merge(live(1.0), live(2.0))
+        assert float(out.value) == 1.0 and not out.is_dead
+
+    def test_dead_first_forwards_second(self):
+        out = merge(live(1.0).dead(), live(2.0))
+        assert float(out.value) == 2.0 and not out.is_dead
+
+    def test_both_dead_is_dead(self):
+        out = merge(live(1.0).dead(), live(2.0).dead())
+        assert out.is_dead
+
+
+class TestFrames:
+    def test_enter_next_exit_roundtrip(self):
+        v = enter(live(5.0), "loop")
+        assert v.tag == (("loop", 0),)
+        v = next_iteration(v)
+        v = next_iteration(v)
+        assert v.tag == (("loop", 2),)
+        v = exit_(v)
+        assert v.tag == ROOT_TAG
+
+    def test_tag_algebra(self):
+        t = enter_tag(ROOT_TAG, "a")
+        t = enter_tag(t, "b")
+        t = next_iteration_tag(t)
+        assert format_tag(t) == "/a/0/b/1"
+        assert exit_tag(t) == (("a", 0),)
+
+    def test_next_iteration_root_illegal(self):
+        with pytest.raises(ValueError):
+            next_iteration(live(1.0))
+
+    def test_exit_root_illegal(self):
+        with pytest.raises(ValueError):
+            exit_(live(1.0))
+
+
+class TestApplyOp:
+    def test_computes_when_alive(self):
+        out = apply_op(lambda a, b: a + b, live(2.0), live(3.0))
+        assert float(out.value) == 5.0
+
+    def test_dead_input_skips_compute(self):
+        calls = []
+
+        def f(a, b):
+            calls.append(1)
+            return a + b
+
+        out = apply_op(f, live(2.0).dead(), live(3.0))
+        assert out.is_dead
+        assert not calls, "computation must be skipped on dead input"
+
+    def test_deadness_is_infectious_or(self):
+        out = apply_op(lambda a, b: a, live(1.0), live(2.0).dead())
+        assert out.is_dead

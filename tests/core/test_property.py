@@ -1,0 +1,119 @@
+"""Hypothesis property tests: control-flow invariants.
+
+- the production lowering agrees with the dataflow reference executor
+  (Fig. 5 semantics) on randomized programs;
+- while_loop gradients agree with unrolled-python autodiff for random
+  trip counts / carries;
+- deadness algebra laws (infectious OR, merge selection).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TaggedValue, apply_op, cond, dataflow_cond,
+                        dataflow_while, merge, scan, switch, while_loop)
+
+# keep examples small: every example traces + compiles
+FAST = settings(max_examples=20, deadline=None)
+
+# NOTE: this container's Python/libm is built with fast-math (FTZ), which
+# breaks hypothesis' IEEE-754 float strategies at definition time — so we
+# derive floats from integer strategies instead.
+
+
+def f32s(lo: float, hi: float, steps: int = 40):
+    return st.integers(0, steps).map(
+        lambda i: float(lo + (hi - lo) * i / steps))
+
+
+finite_f32 = f32s(-2.0, 2.0)
+
+
+class TestWhileAgreesWithDataflowRef:
+    @FAST
+    @given(x=finite_f32, n=st.integers(0, 9),
+           a=f32s(0.1, 1.5),
+           b=finite_f32)
+    def test_affine_loop(self, x, n, a, b):
+        body = lambda i, y: (i + 1, y * a + b)
+        pred = lambda i, y: i < n
+        ref = dataflow_while(pred, body, (0, jnp.float32(x)))
+        out = while_loop(lambda c: pred(*c), lambda c: body(*c),
+                         (jnp.int32(0), jnp.float32(x)), max_iters=16)
+        np.testing.assert_allclose(out[1], ref[1], rtol=1e-5, atol=1e-5)
+
+    @FAST
+    @given(pred=st.booleans(), x=finite_f32)
+    def test_cond_agrees(self, pred, x):
+        t = lambda v: v * 2.0 + 1.0
+        f = lambda v: v - 3.0
+        ref = dataflow_cond(pred, t, f, jnp.float32(x))
+        for backend in ("native", "select"):
+            out = cond(jnp.asarray(pred), t, f, jnp.float32(x),
+                       backend=backend)
+            np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+class TestGradProperty:
+    @FAST
+    @given(n=st.integers(0, 8), w=f32s(0.2, 1.2),
+           x=f32s(-1.0, 1.0))
+    def test_while_grad_equals_unrolled(self, n, w, x):
+        def loss(w, x):
+            _, y = while_loop(lambda c: c[0] < n,
+                              lambda c: (c[0] + 1, jnp.tanh(c[1] * w)),
+                              (jnp.int32(0), x), max_iters=8)
+            return y
+
+        def ref(w, x):
+            y = x
+            for _ in range(n):
+                y = jnp.tanh(y * w)
+            return y
+
+        g = jax.grad(loss, argnums=(0, 1))(jnp.float32(w), jnp.float32(x))
+        gr = jax.grad(ref, argnums=(0, 1))(jnp.float32(w), jnp.float32(x))
+        np.testing.assert_allclose(g[0], gr[0], rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(g[1], gr[1], rtol=1e-4, atol=1e-6)
+
+    @FAST
+    @given(data=st.lists(finite_f32, min_size=1, max_size=8))
+    def test_scan_matches_python(self, data):
+        xs = jnp.asarray(data, jnp.float32)
+        ys = scan(lambda c, x: c * 0.7 + x, xs, jnp.float32(0.0))
+        c, ref = 0.0, []
+        for v in data:
+            c = c * 0.7 + v
+            ref.append(c)
+        np.testing.assert_allclose(ys, np.asarray(ref, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestDeadnessAlgebra:
+    @FAST
+    @given(d1=st.booleans(), d2=st.booleans())
+    def test_op_deadness_is_or(self, d1, d2):
+        a = TaggedValue(jnp.float32(1.0), d1)
+        b = TaggedValue(jnp.float32(2.0), d2)
+        out = apply_op(lambda x, y: x + y, a, b)
+        assert out.is_dead == (d1 or d2)
+
+    @FAST
+    @given(d1=st.booleans(), d2=st.booleans())
+    def test_merge_dead_iff_both_dead(self, d1, d2):
+        a = TaggedValue(jnp.float32(1.0), d1)
+        b = TaggedValue(jnp.float32(2.0), d2)
+        assert merge(a, b).is_dead == (d1 and d2)
+
+    @FAST
+    @given(p=st.booleans(), d=st.booleans())
+    def test_switch_exactly_one_live(self, p, d):
+        v = TaggedValue(jnp.float32(1.0), d)
+        f_port, t_port = switch(v, TaggedValue(jnp.asarray(p)))
+        if d:
+            assert f_port.is_dead and t_port.is_dead
+        else:
+            assert f_port.is_dead == p
+            assert t_port.is_dead == (not p)

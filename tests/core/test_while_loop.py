@@ -1,0 +1,198 @@
+"""while_loop: forward semantics + stack-saving reverse-mode AD (§5.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fori_loop, while_loop
+
+POLICIES = ["all", "carry", "offload"]
+
+
+def ref_loop(w, x, n):
+    y = x
+    for _ in range(int(n)):
+        y = jnp.tanh(y * w)
+    return y
+
+
+class TestForward:
+    def test_dynamic_trip_count(self):
+        out = while_loop(lambda c: c[0] < 7,
+                         lambda c: (c[0] + 1, c[1] * 1.5 + 1.0),
+                         (jnp.int32(0), jnp.float32(2.0)), max_iters=100)
+        ref = 2.0
+        for _ in range(7):
+            ref = ref * 1.5 + 1.0
+        assert int(out[0]) == 7
+        np.testing.assert_allclose(out[1], ref, rtol=1e-6)
+
+    def test_zero_iterations(self):
+        out = while_loop(lambda c: c[0] < 0,
+                         lambda c: (c[0] + 1, c[1] + 1.0),
+                         (jnp.int32(0), jnp.float32(5.0)), max_iters=4)
+        np.testing.assert_allclose(out[1], 5.0)
+
+    def test_max_iters_clamps(self):
+        out = while_loop(lambda c: c[0] < 100,
+                         lambda c: (c[0] + 1, c[1]),
+                         (jnp.int32(0), jnp.float32(0.0)), max_iters=5)
+        # primal path has no clamp requirement unless differentiated; the
+        # augmented path clamps at max_iters
+        g = jax.grad(lambda x: while_loop(
+            lambda c: c[0] < 100, lambda c: (c[0] + 1, c[1] * 2.0),
+            (jnp.int32(0), x), max_iters=5)[1])(jnp.float32(1.0))
+        np.testing.assert_allclose(g, 2.0 ** 5)
+
+    def test_counted_loop_unroll_equivalence(self):
+        for unroll in (1, 2, 4, 10):
+            y = fori_loop(0, 10, lambda i, c: c + jnp.float32(i),
+                          jnp.float32(0.0), parallel_iterations=unroll)
+            np.testing.assert_allclose(y, 45.0)
+
+
+class TestGradients:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_grad_matches_unrolled(self, policy):
+        def loss(w, x):
+            def b(c):
+                return (c[0] + 1, jnp.tanh(c[1] * w))
+            _, y = while_loop(lambda c: c[0] < 6, b, (jnp.int32(0), x),
+                              max_iters=8, save_policy=policy)
+            return y ** 2
+
+        def loss_ref(w, x):
+            return ref_loop(w, x, 6) ** 2
+
+        g = jax.grad(loss, argnums=(0, 1))(jnp.float32(1.3),
+                                           jnp.float32(0.7))
+        gr = jax.grad(loss_ref, argnums=(0, 1))(jnp.float32(1.3),
+                                                jnp.float32(0.7))
+        np.testing.assert_allclose(g[0], gr[0], rtol=1e-5)
+        np.testing.assert_allclose(g[1], gr[1], rtol=1e-5)
+
+    def test_loop_constant_gradient_summed(self):
+        """Paper §5.1 feature (3): const grads accumulate per iteration."""
+        w = jnp.float32(2.0)
+
+        def loss(w):
+            # y_n = x + n*w  => dy/dw = n
+            _, y = while_loop(lambda c: c[0] < 5,
+                              lambda c: (c[0] + 1, c[1] + w),
+                              (jnp.int32(0), jnp.float32(0.0)), max_iters=8)
+            return y
+
+        np.testing.assert_allclose(jax.grad(loss)(w), 5.0)
+
+    def test_data_dependent_trip_count_grad(self):
+        """The gradient loop must run the *actual* number of iterations."""
+        def loss(x, n):
+            _, y = while_loop(lambda c: c[0] < n,
+                              lambda c: (c[0] + 1, c[1] * 2.0),
+                              (jnp.int32(0), x), max_iters=16)
+            return y
+
+        for n in (0, 1, 3, 16):
+            g = jax.grad(loss)(jnp.float32(1.0), jnp.int32(n))
+            np.testing.assert_allclose(g, 2.0 ** n)
+
+    def test_jit_grad(self):
+        def loss(w, x, n):
+            _, y = while_loop(lambda c: c[0] < n,
+                              lambda c: (c[0] + 1, jnp.sin(c[1] * w)),
+                              (jnp.int32(0), x), max_iters=10)
+            return y
+
+        g = jax.jit(jax.grad(loss, argnums=(0, 1)))(
+            jnp.float32(0.9), jnp.float32(0.5), jnp.int32(4))
+
+        def ref(w, x):
+            y = x
+            for _ in range(4):
+                y = jnp.sin(y * w)
+            return y
+
+        gr = jax.grad(ref, argnums=(0, 1))(jnp.float32(0.9),
+                                           jnp.float32(0.5))
+        np.testing.assert_allclose(g[0], gr[0], rtol=1e-5)
+        np.testing.assert_allclose(g[1], gr[1], rtol=1e-5)
+
+    def test_nested_while_grad(self):
+        w = jnp.float32(0.5)
+
+        def nested(w, x):
+            def ob(s):
+                i, y = s
+
+                def ib(t):
+                    return (t[0] + 1, t[1] * w)
+
+                _, y2 = while_loop(lambda t: t[0] < 3, ib,
+                                   (jnp.int32(0), y), max_iters=4)
+                return (i + 1, y2 + 1.0)
+
+            _, out = while_loop(lambda s: s[0] < 2, ob, (jnp.int32(0), x),
+                                max_iters=4)
+            return out
+
+        def nested_ref(w, x):
+            y = x
+            for _ in range(2):
+                for _ in range(3):
+                    y = y * w
+                y = y + 1.0
+            return y
+
+        g1 = jax.grad(nested)(w, jnp.float32(0.3))
+        g2 = jax.grad(nested_ref)(w, jnp.float32(0.3))
+        np.testing.assert_allclose(g1, g2, rtol=1e-5)
+
+    def test_cond_in_while_grad(self):
+        def loss(w, x):
+            def b(c):
+                i, y = c
+                y = jax.lax.cond(i % 2 == 0, lambda: y * w, lambda: y + 1.0)
+                return (i + 1, y)
+
+            _, y = while_loop(lambda c: c[0] < 4, b, (jnp.int32(0), x),
+                              max_iters=4)
+            return y
+
+        def ref(w, x):
+            y = x
+            for i in range(4):
+                y = y * w if i % 2 == 0 else y + 1.0
+            return y
+
+        g = jax.grad(loss, argnums=(0, 1))(jnp.float32(1.5), jnp.float32(2.0))
+        gr = jax.grad(ref, argnums=(0, 1))(jnp.float32(1.5), jnp.float32(2.0))
+        np.testing.assert_allclose(g[0], gr[0], rtol=1e-5)
+        np.testing.assert_allclose(g[1], gr[1], rtol=1e-5)
+
+    def test_matrix_carry(self):
+        """Shape-preserving matrix loop (paper §5.1 example program)."""
+        w = jax.random.normal(jax.random.PRNGKey(0), (10, 10)) * 0.1
+        x = jax.random.normal(jax.random.PRNGKey(1), (10, 10))
+
+        def loss(w, x):
+            _, a = while_loop(lambda c: c[0] < 3,
+                              lambda c: (c[0] + 1, c[1] @ w),
+                              (jnp.int32(0), x), max_iters=3)
+            return a.sum()
+
+        def ref(w, x):
+            a = x
+            for _ in range(3):
+                a = a @ w
+            return a.sum()
+
+        g = jax.grad(loss)(w, x)
+        gr = jax.grad(ref)(w, x)
+        np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-6)
+
+    def test_requires_max_iters_for_grad(self):
+        with pytest.raises(ValueError, match="max_iters"):
+            jax.grad(lambda x: while_loop(
+                lambda c: c[0] < 3, lambda c: (c[0] + 1, c[1] * 2.0),
+                (jnp.int32(0), x))[1])(jnp.float32(1.0))

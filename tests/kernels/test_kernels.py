@@ -1,0 +1,104 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import attention_ref, flash_attention
+from repro.kernels.lstm_cell.ops import lstm_cell, lstm_cell_ref
+from repro.kernels.selective_scan.ops import selective_scan, \
+    selective_scan_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def rand(shape, dtype, i=0):
+    return jax.random.normal(jax.random.fold_in(KEY, i), shape
+                             ).astype(dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S,H,KV,D", [
+        (1, 128, 4, 4, 32),    # MHA
+        (2, 256, 8, 2, 64),    # GQA 4:1
+        (1, 64, 6, 3, 128),    # GQA 2:1, wide head
+        (2, 128, 2, 1, 16),    # MQA
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_sweep(self, B, S, H, KV, D, dtype, causal):
+        q = rand((B, S, H, D), dtype, 0)
+        k = rand((B, S, KV, D), dtype, 1)
+        v = rand((B, S, KV, D), dtype, 2)
+        out = flash_attention(q, k, v, causal=causal, blk_q=64, blk_k=64)
+        ref = attention_ref(q, k, v, causal=causal)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+        np.testing.assert_allclose(out.astype(np.float32),
+                                   ref.astype(np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_block_shape_independence(self):
+        q = rand((1, 256, 4, 32), jnp.float32, 0)
+        k = rand((1, 256, 2, 32), jnp.float32, 1)
+        v = rand((1, 256, 2, 32), jnp.float32, 2)
+        outs = [flash_attention(q, k, v, causal=True, blk_q=bq, blk_k=bk)
+                for bq, bk in [(64, 64), (128, 64), (64, 128), (128, 128)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+class TestSelectiveScan:
+    @pytest.mark.parametrize("B,Q,Di,N,blk", [
+        (1, 16, 32, 8, 32),
+        (2, 32, 64, 16, 32),
+        (2, 64, 128, 4, 64),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, B, Q, Di, N, blk, dtype):
+        dt = jax.nn.softplus(rand((B, Q, Di), dtype, 0))
+        A = -jnp.exp(rand((Di, N), jnp.float32, 1) * 0.5)
+        B_ = rand((B, Q, N), dtype, 2)
+        C_ = rand((B, Q, N), dtype, 3)
+        x = rand((B, Q, Di), dtype, 4)
+        h0 = rand((B, Di, N), jnp.float32, 5)
+        y, h = selective_scan(dt, A, B_, C_, x, h0, blk_d=blk)
+        yr, hr = selective_scan_ref(dt, A, B_, C_, x, h0)
+        tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(y.astype(np.float32), yr,
+                                   rtol=tol, atol=tol)
+        np.testing.assert_allclose(h, hr, rtol=tol, atol=tol)
+
+
+class TestLSTMCell:
+    @pytest.mark.parametrize("B,D,H,bb,bh", [
+        (8, 32, 64, 4, 32),
+        (16, 64, 128, 8, 64),
+        (4, 16, 32, 4, 32),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, B, D, H, bb, bh, dtype):
+        w = rand((D + H, 4 * H), dtype, 0) * 0.1
+        b = rand((4 * H,), dtype, 1) * 0.1
+        x = rand((B, D), dtype, 2)
+        c = rand((B, H), dtype, 3)
+        h = rand((B, H), dtype, 4)
+        cn, hn = lstm_cell(w, b, x, c, h, blk_b=bb, blk_h=bh)
+        cr, hr = lstm_cell_ref(w, b, x, c, h)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(cn.astype(np.float32),
+                                   cr.astype(np.float32), rtol=tol, atol=tol)
+        np.testing.assert_allclose(hn.astype(np.float32),
+                                   hr.astype(np.float32), rtol=tol, atol=tol)
+
+    def test_matches_model_cell(self):
+        """The kernel is a drop-in for repro.models.rnn.lstm_cell."""
+        from repro.models import rnn
+        p = rnn.lstm_init(KEY, 32, 64)
+        x = rand((8, 32), jnp.float32, 1)
+        c = rand((8, 64), jnp.float32, 2)
+        h = rand((8, 64), jnp.float32, 3)
+        y_ref, (c_ref, h_ref) = rnn.lstm_cell(p, x, (c, h))
+        c_k, h_k = lstm_cell(p["w"], p["b"], x, c, h, blk_b=8, blk_h=64)
+        np.testing.assert_allclose(c_k, c_ref, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(h_k, h_ref, rtol=1e-5, atol=1e-5)

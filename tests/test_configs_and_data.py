@@ -1,0 +1,97 @@
+"""Config registry + data pipeline coverage."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.configs import (ARCH_IDS, SHAPES, ModelConfig, cell_is_runnable,
+                           get_config)
+from repro.data.pipeline import MemmapCorpus, SyntheticLM
+
+
+class TestConfigs:
+    def test_all_archs_resolve(self):
+        for arch in ARCH_IDS:
+            full = get_config(arch)
+            smoke = get_config(arch, smoke=True)
+            assert isinstance(full, ModelConfig)
+            assert full.family == smoke.family
+            assert full.vocab > 0 and full.n_layers > 0
+
+    def test_exact_assigned_dimensions(self):
+        """Spot-check the assignment's exact numbers."""
+        c = get_config("dbrx-132b")
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == \
+            (40, 6144, 48, 8)
+        assert (c.moe.n_experts, c.moe.top_k) == (16, 4)
+        c = get_config("qwen2-7b")
+        assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == \
+            (28, 3584, 18944, 152064)
+        assert c.qkv_bias
+        c = get_config("falcon-mamba-7b")
+        assert (c.n_layers, c.d_model, c.ssm.d_state) == (64, 4096, 16)
+        c = get_config("whisper-small")
+        assert (c.encoder_layers, c.n_layers, c.d_model) == (12, 12, 768)
+        c = get_config("zamba2-1.2b")
+        assert (c.n_layers, c.ssm.kind) == (38, "mamba2")
+
+    def test_unknown_arch_raises(self):
+        with pytest.raises(KeyError):
+            get_config("gpt-17")
+
+    def test_long_500k_applicability(self):
+        runnable = {a for a in ARCH_IDS
+                    if cell_is_runnable(get_config(a),
+                                        SHAPES["long_500k"])[0]}
+        assert runnable == {"falcon-mamba-7b", "zamba2-1.2b"}
+
+    def test_param_counts_in_expected_range(self):
+        from repro.models import model_zoo
+        expect = {"dbrx-132b": (120e9, 140e9),
+                  "qwen2-7b": (7e9, 8.5e9),
+                  "falcon-mamba-7b": (6.5e9, 8e9),
+                  "smollm-135m": (0.12e9, 0.16e9),
+                  "llama3.2-1b": (1.0e9, 1.6e9),
+                  "olmo-1b": (0.9e9, 1.4e9)}
+        for arch, (lo, hi) in expect.items():
+            n = model_zoo.count_params(get_config(arch))
+            assert lo <= n <= hi, (arch, n)
+
+    def test_moe_active_params_smaller(self):
+        from repro.models import model_zoo
+        cfg = get_config("dbrx-132b")
+        total = model_zoo.count_params(cfg)
+        active = model_zoo.count_active_params(cfg)
+        assert active < total * 0.4
+
+
+class TestData:
+    def test_synthetic_deterministic_per_step_host(self):
+        a = SyntheticLM(100, 16, 4, seed=7, host=0, n_hosts=2)
+        b = SyntheticLM(100, 16, 4, seed=7, host=1, n_hosts=2)
+        a0, a0_again = a.batch_at(3), a.batch_at(3)
+        np.testing.assert_array_equal(a0["tokens"], a0_again["tokens"])
+        assert not np.array_equal(a0["tokens"], b.batch_at(3)["tokens"])
+        # labels are next-token shifted
+        np.testing.assert_array_equal(a0["labels"][:, :-1],
+                                      a0["tokens"][:, 1:])
+
+    def test_synthetic_learnable_structure(self):
+        d = SyntheticLM(64, 32, 4, seed=0)
+        b = d.batch_at(0)
+        # t[i+1] = (31 t[i] + e) % V with e in [0,7)
+        diff = (b["labels"] - (b["tokens"] * 31) % 64) % 64
+        assert (diff < 7).all()
+
+    def test_memmap_corpus(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "corpus.bin")
+            np.arange(10000, dtype=np.uint16).tofile(path)
+            c = MemmapCorpus(path, vocab=500, seq_len=16, batch=4)
+            b0 = c.batch_at(0)
+            assert b0["tokens"].shape == (4, 16)
+            assert (b0["tokens"] < 500).all()
+            np.testing.assert_array_equal(
+                c.batch_at(1)["tokens"], c.batch_at(1)["tokens"])

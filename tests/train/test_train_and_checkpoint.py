@@ -1,0 +1,179 @@
+"""Training loop + fault tolerance: loss decreases, checkpoint/restart
+is exact, preemption saves, in-graph loop == python loop, watchdog."""
+
+import os
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import checkpoint as ck
+from repro.configs import get_config
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.models import model_zoo
+from repro.optim import adamw, schedule
+from repro.train import train_loop
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="smollm-135m", lr=1e-3):
+    cfg = get_config(arch, smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    opt_cfg = adamw.AdamWConfig(lr=lr, schedule=schedule.constant())
+    opt = adamw.init(params)
+    data = SyntheticLM(cfg.vocab, 32, 4, seed=1)
+    return cfg, params, opt_cfg, opt, data
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        cfg, params, opt_cfg, opt, _ = _setup(lr=5e-3)
+        # small-vocab synthetic stream: learnable within a few steps
+        data = SyntheticLM(64, 32, 8, seed=1)
+        opt_cfg = adamw.AdamWConfig(lr=5e-3, weight_decay=0.0,
+                                    schedule=schedule.constant())
+        step = jax.jit(train_loop.make_train_step(cfg, opt_cfg))
+        losses = []
+        for i in range(60):
+            params, opt, m = step(params, opt, data.batch_at(i))
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5, \
+            (losses[:5], losses[-5:])
+
+    def test_grad_accum_equals_full_batch(self):
+        """grad_accum microbatching == single big batch (same update)."""
+        cfg, params, opt_cfg, opt, data = _setup()
+        batch = data.batch_at(0)
+        s1 = jax.jit(train_loop.make_train_step(cfg, opt_cfg))
+        c2 = dataclasses.replace(cfg, grad_accum=2)
+        s2 = jax.jit(train_loop.make_train_step(c2, opt_cfg))
+        p1, _, m1 = s1(params, opt, batch)
+        p2, _, m2 = s2(params, opt, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-3)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            # bf16 forward + different reduction order => small noise
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-1, atol=2e-3)
+
+    def test_in_graph_loop_matches_python_loop(self):
+        """Paper §2.2 in-graph training loop == step-by-step driving."""
+        cfg, params, opt_cfg, opt, data = _setup()
+        k = 4
+        batches = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[data.batch_at(i) for i in range(k)])
+        loop = jax.jit(train_loop.make_in_graph_loop(cfg, opt_cfg, k))
+        p_in, o_in, _ = loop(params, opt, batches)
+
+        step = jax.jit(train_loop.make_train_step(cfg, opt_cfg))
+        p_py, o_py = params, opt
+        for i in range(k):
+            p_py, o_py, _ = step(p_py, o_py, data.batch_at(i))
+        for a, b in zip(jax.tree.leaves(p_in), jax.tree.leaves(p_py)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-4, atol=1e-5)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_resume_exact(self):
+        cfg, params, opt_cfg, opt, data = _setup()
+        step = jax.jit(train_loop.make_train_step(cfg, opt_cfg))
+        with tempfile.TemporaryDirectory() as d:
+            # run 6 steps, checkpoint at 3
+            p, o = params, opt
+            for i in range(3):
+                p, o, _ = step(p, o, data.batch_at(i))
+            ck.save(d, 3, {"params": p, "opt": o})
+            for i in range(3, 6):
+                p, o, _ = step(p, o, data.batch_at(i))
+            ref = p
+
+            # restart from the checkpoint, replay the same data
+            got_step, state = ck.restore_latest(
+                d, {"params": params, "opt": opt})
+            assert got_step == 3
+            p2, o2 = state["params"], state["opt"]
+            for i in range(3, 6):
+                p2, o2, _ = step(p2, o2, data.batch_at(i))
+            for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(p2)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-6, atol=1e-7)
+
+    def test_atomic_commit_ignores_partial(self):
+        with tempfile.TemporaryDirectory() as d:
+            os.makedirs(os.path.join(d, "step_000000009.tmp"))
+            assert ck.latest_step(d) is None
+            ck.save(d, 2, {"x": jnp.ones(3)})
+            assert ck.latest_step(d) == 2
+
+    def test_keep_last_gc(self):
+        with tempfile.TemporaryDirectory() as d:
+            for s in (1, 2, 3, 4, 5):
+                ck.save(d, s, {"x": jnp.ones(2)}, keep_last=2)
+            names = sorted(os.listdir(d))
+            assert names == ["step_000000004", "step_000000005"], names
+
+    def test_async_saver(self):
+        with tempfile.TemporaryDirectory() as d:
+            s = ck.AsyncSaver()
+            s.save_async(d, 1, {"x": jnp.arange(4.0)})
+            s.wait()
+            _, state = ck.restore_latest(d, {"x": jnp.zeros(4)})
+            np.testing.assert_allclose(state["x"], np.arange(4.0))
+
+
+class TestPrefetcher:
+    def test_ordered_and_deterministic(self):
+        data = SyntheticLM(100, 8, 2, seed=3)
+        pf = Prefetcher(data, start_step=0)
+        s0, b0 = next(pf)
+        s1, b1 = next(pf)
+        pf.close()
+        assert (s0, s1) == (0, 1)
+        np.testing.assert_array_equal(b0["tokens"],
+                                      data.batch_at(0)["tokens"])
+        np.testing.assert_array_equal(b1["tokens"],
+                                      data.batch_at(1)["tokens"])
+
+
+class TestWatchdogAndPreemption:
+    def test_trainer_runs_and_checkpoints(self):
+        cfg, params, opt_cfg, opt, data = _setup()
+        step = jax.jit(train_loop.make_train_step(cfg, opt_cfg))
+        with tempfile.TemporaryDirectory() as d:
+            tr = train_loop.Trainer(
+                step, data, train_loop.TrainerConfig(
+                    ckpt_dir=d, ckpt_every=5, log_every=100),
+                log_fn=lambda s: None)
+            p, o, m = tr.run(params, opt, steps=6)
+            assert ck.latest_step(d) == 5
+            assert np.isfinite(float(m["loss"]))
+
+    def test_preemption_saves_and_exits(self):
+        cfg, params, opt_cfg, opt, data = _setup()
+        step = jax.jit(train_loop.make_train_step(cfg, opt_cfg))
+        with tempfile.TemporaryDirectory() as d:
+            tr = train_loop.Trainer(
+                step, data, train_loop.TrainerConfig(
+                    ckpt_dir=d, ckpt_every=1000, log_every=100),
+                log_fn=lambda s: None)
+            # simulate SIGTERM midway through
+            orig = tr.step_fn
+            calls = {"n": 0}
+
+            def wrapped(*a):
+                calls["n"] += 1
+                if calls["n"] == 3:
+                    tr._preempted = True
+                return orig(*a)
+
+            tr.step_fn = wrapped
+            tr.run(params, opt, steps=100)
+            assert calls["n"] == 3          # stopped early
+            assert ck.latest_step(d) == 3   # saved at preemption

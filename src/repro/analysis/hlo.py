@@ -130,8 +130,15 @@ def parse_computations(hlo_text: str) -> Dict[str, Computation]:
 def _dot_flops(instr: Instruction, sym: Dict[str, str]) -> float:
     """2 * prod(result dims) * prod(contraction dims of lhs)."""
     out_elems = _shape_elems(instr.shape)
-    m = re.search(r"(?:dot|dot-general)\((?:%([\w.\-]+)),", instr.text)
-    lhs_shape = sym.get(m.group(1), "") if m else ""
+    # The lhs operand is either annotated inline
+    # (`dot(f32[32,64]{1,0} %Arg_0.1, ...)`) or a bare name whose shape
+    # lives in the symbol table (`dot(%arg0, ...)`).
+    m = re.search(
+        r"(?:dot|dot-general)\(\s*(?:([a-z0-9]+\[[0-9,]*\])(?:\{[^}]*\})?"
+        r"\s+)?%?([\w.\-]+)", instr.text)
+    lhs_shape = ""
+    if m:
+        lhs_shape = m.group(1) or sym.get(m.group(2), "")
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.text)
     contract = 1
     if cm and lhs_shape:

@@ -43,7 +43,11 @@ may run concurrently. XLA schedules a rolled loop strictly sequentially,
 so concurrency must be expressed as instruction-level parallelism: for
 counted loops (``cond_fn=None``) the value is used as the ``unroll``
 factor of the underlying scan. In the distributed setting the same knob
-becomes the number of microbatches in flight (``repro.dist.pipeline``).
+becomes the number of microbatches in flight (``repro.dist.pipeline``):
+pass ``mesh=`` and, when the mesh carries a pipeline "stage" axis, the
+unroll window is widened to at least one full stage rotation
+(``repro.dist.pipeline.schedule_unroll``) so stage ``k`` of iteration
+``i+1`` can overlap stage ``k+1`` of iteration ``i``.
 """
 
 from __future__ import annotations
@@ -81,6 +85,7 @@ def while_loop(cond_fn: Optional[Callable], body_fn: Callable, init: Any, *,
                save_policy: str = "all",
                parallel_iterations: int = 1,
                offload_shardings: Any = None,
+               mesh: Any = None,
                name: str = "while") -> Any:
     """Run ``body_fn`` while ``cond_fn`` holds; reverse-differentiable.
 
@@ -97,6 +102,11 @@ def while_loop(cond_fn: Optional[Callable], body_fn: Callable, init: Any, *,
         device-side shardings of the carry leaves, required for host
         offload under SPMD (the host stack keeps the same partitioning,
         memory_kind=pinned_host). Single-device callers may omit it.
+      mesh: optional device mesh the loop runs under. With
+        ``parallel_iterations > 1`` on a multi-device mesh carrying a
+        pipeline "stage" axis, the concurrency window is routed through
+        ``repro.dist.pipeline.schedule_unroll`` so the unrolled body
+        copies span a full stage rotation (§4.3 concurrent iterations).
       name: frame name, for error messages.
 
     Returns:
@@ -125,12 +135,17 @@ def while_loop(cond_fn: Optional[Callable], body_fn: Callable, init: Any, *,
         if save_policy == "all":
             # Fast path: XLA scan with native AD (residual saving is
             # equivalent); parallel_iterations lowers to unroll.
+            window = parallel_iterations
+            if mesh is not None and parallel_iterations > 1:
+                from ..dist import pipeline as _pipeline
+                window = _pipeline.schedule_unroll(mesh,
+                                                   parallel_iterations)
+
             def scan_body(c, _):
                 return body_fn(c), None
 
             out, _ = jax.lax.scan(scan_body, init, None, length=max_iters,
-                                  unroll=max(1, min(parallel_iterations,
-                                                    max_iters)))
+                                  unroll=max(1, min(window, max_iters)))
             return out
 
     # Hoist captured tracers out of body/cond so they can be differentiated
@@ -148,7 +163,7 @@ def while_loop(cond_fn: Optional[Callable], body_fn: Callable, init: Any, *,
 
 def fori_loop(lower, upper: int, body_fn: Callable, init: Any, *,
               save_policy: str = "all", parallel_iterations: int = 1,
-              offload_shardings: Any = None) -> Any:
+              offload_shardings: Any = None, mesh: Any = None) -> Any:
     """Counted loop ``for i in [lower, upper): carry = body_fn(i, carry)``."""
     n = int(upper) - int(lower)
 
@@ -161,7 +176,7 @@ def fori_loop(lower, upper: int, body_fn: Callable, init: Any, *,
     _, out = while_loop(None, body, (jnp.asarray(lower, jnp.int32), init),
                         max_iters=n, save_policy=save_policy,
                         parallel_iterations=parallel_iterations,
-                        offload_shardings=offload_shardings)
+                        offload_shardings=offload_shardings, mesh=mesh)
     return out
 
 

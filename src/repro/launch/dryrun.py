@@ -92,15 +92,6 @@ def _bf16_abstract(tree):
         if jnp.issubdtype(s.dtype, jnp.floating) else s, tree)
 
 
-def _cache_shardings(cfg, cache_axes, rules, mesh, batch_ok: bool):
-    def fix(axes):
-        if not batch_ok:
-            axes = tuple(None if a == "batch" else a for a in axes)
-        return rules.sharding(axes, mesh)
-    return jax.tree.map(fix, cache_axes,
-                        is_leaf=lambda x: isinstance(x, tuple))
-
-
 def lower_cell(arch: str, shape_name: str, multi_pod: bool):
     """Returns a dict of analysis results for one cell."""
     cfg = get_config(arch)
@@ -147,8 +138,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
         serve_params = _bf16_abstract(abs_params)
         cache_abs = engine.make_cache(cfg, shape.global_batch, cache_len,
                                       mode="abstract")
-        cache_axes = engine.make_cache(cfg, 0, 0, mode="axes")
-        cache_sh = _cache_shardings(cfg, cache_axes, rules, mesh, batch_ok)
+        cache_sh = engine.cache_shardings(cfg, rules, mesh,
+                                          batch_sharded=batch_ok)
 
         def prefill_step(params, batch, cache):
             return engine.prefill(params, cfg, batch["tokens"], cache, rules,
@@ -163,8 +154,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
         serve_params = _bf16_abstract(abs_params)
         cache_abs = engine.make_cache(cfg, shape.global_batch, cache_len,
                                       mode="abstract")
-        cache_axes = engine.make_cache(cfg, 0, 0, mode="axes")
-        cache_sh = _cache_shardings(cfg, cache_axes, rules, mesh, batch_ok)
+        cache_sh = engine.cache_shardings(cfg, rules, mesh,
+                                          batch_sharded=batch_ok)
 
         def serve_step(params, token, cache, cur_len):
             return engine.decode_step(params, cfg, token, cache, cur_len,
@@ -184,6 +175,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):  # jax < 0.5 returns one dict per device
+        ca = ca[0] if ca else {}
     hlo_text = compiled.as_text()
     cost = hlo_lib.analyze(hlo_text)
 

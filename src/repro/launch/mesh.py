@@ -10,6 +10,16 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    # jax < 0.5 has no jax.sharding.AxisType (everything is Auto there);
+    # newer versions need it spelled out to keep GSPMD auto-propagation.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """(16,16) data×model single-pod; (2,16,16) pod×data×model multi-pod.
 
@@ -18,11 +28,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh helper for tests/benchmarks."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(tuple(shape), tuple(axes))

@@ -47,7 +47,10 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--mesh", default=None,
-                    help="e.g. '4,2' => (data,model); default single device")
+                    help="e.g. '4,2' => (data,model) or '2,2,2' => "
+                         "(data,model,stage); the stage axis is accepted "
+                         "but the train step does not pipeline over it "
+                         "yet (ROADMAP); default single device")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -60,7 +63,11 @@ def main():
     if args.mesh:
         from repro.launch.mesh import make_mesh
         shape = tuple(int(x) for x in args.mesh.split(","))
-        mesh = make_mesh(shape, ("data", "model")[:len(shape)])
+        mesh = make_mesh(shape, ("data", "model", "stage")[:len(shape)])
+        if len(shape) > 2 and shape[2] > 1:
+            print("[launch.train] note: stage axis accepted but the train "
+                  "step does not pipeline over it yet (see ROADMAP); "
+                  "stage shards will hold replicas")
         rules = model_zoo.make_rules(cfg, mesh)
         param_sh = logical_to_sharding(model_zoo.param_axes(cfg), rules,
                                        mesh)

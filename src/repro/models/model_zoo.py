@@ -10,7 +10,6 @@ import jax.numpy as jnp
 
 from ..configs import ModelConfig
 from ..dist import sharding as sh
-from ..dist import sharding as sh
 from ..dist.sharding import resolve_rules
 from . import encdec, params as params_lib, transformer
 

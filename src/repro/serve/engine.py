@@ -93,6 +93,23 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int,
     raise ValueError(fam)
 
 
+def cache_shardings(cfg: ModelConfig, rules, mesh=None, *,
+                    batch_sharded: bool = True) -> Any:
+    """NamedShardings for the serve cache under ``rules``.
+
+    ``batch_sharded=False`` replicates the batch dim (callers whose
+    serving batch does not divide the data axes, e.g. dry-run cells).
+    """
+    axes = make_cache(cfg, 0, 0, mode="axes")
+
+    def fix(spec):
+        if not batch_sharded:
+            spec = tuple(None if a == sh.BATCH else a for a in spec)
+        return rules.sharding(spec, mesh)
+
+    return jax.tree.map(fix, axes, is_leaf=lambda x: isinstance(x, tuple))
+
+
 # =========================== decode steps ===================================
 
 def _decode_attn_families(params, cfg, rules, x, cache, cur_len):

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from .. import core
 from ..checkpointing import checkpoint as ckpt_lib
+from ..dist import sharding as sh
 from ..models import model_zoo
 from ..optim import adamw
 
@@ -43,6 +44,11 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, rules=None,
             params, cfg, batch, rules)
 
     def train_step(params, opt_state, batch):
+        # Pin the incoming batch to the data axes (no-op off-mesh) so
+        # the host->device batch never replicates across data shards.
+        batch = jax.tree.map(
+            lambda x: sh.constrain(
+                x, rules, (sh.BATCH,) + (None,) * (x.ndim - 1)), batch)
         if n_micro == 1:
             (loss, metrics), grads = grads_of(params, batch)
         else:

@@ -10,7 +10,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install repro[test]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (TaggedValue, apply_op, cond, dataflow_cond,
                         dataflow_while, merge, scan, switch, while_loop)

@@ -8,8 +8,8 @@ import traceback
 def main() -> None:
     from . import (bench_dqn, bench_loop_overhead, bench_loop_scaling,
                    bench_memory_swap, bench_model_parallel,
-                   bench_parallel_iterations, bench_static_vs_dynamic,
-                   roofline_report)
+                   bench_parallel_iterations, bench_serving,
+                   bench_static_vs_dynamic, roofline_report)
 
     suites = [
         ("Fig11", bench_loop_scaling),
@@ -19,6 +19,7 @@ def main() -> None:
         ("Fig15", bench_model_parallel),
         ("S6.5", bench_dqn),
         ("S6.1", bench_loop_overhead),
+        ("Serving", bench_serving),
         ("Roofline", roofline_report),
     ]
     print("name,us_per_call,derived")

@@ -1,7 +1,11 @@
-"""Batched serving with the in-graph generation loop: prefill a batch of
-prompts, then decode greedily inside ONE while_loop with per-sequence
-EOS early-exit (dynamic control flow in inference — the loop stops as
-soon as every sequence finished, not at max_new).
+"""Serving with dynamic control flow, two ways.
+
+1. Batch-synchronous: prefill a batch of prompts, decode greedily
+   inside ONE in-graph while_loop with per-sequence EOS early-exit
+   (the loop stops as soon as every sequence finished, not at max_new).
+2. Continuous batching: a slot pool decodes requests with *different*
+   budgets; a slot that finishes mid-stream is retired in-graph and a
+   queued request takes its cache column between device steps.
 
     PYTHONPATH=src python examples/serve_decode.py --arch smollm-135m
 """
@@ -18,6 +22,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.models import model_zoo
 from repro.serve import engine
+from repro.serve import scheduler as sched_lib
 
 
 def main():
@@ -34,7 +39,8 @@ def main():
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 2,
                                 cfg.vocab)
 
-    gen = jax.jit(lambda p, t: engine.generate(
+    # ---- batch-synchronous in-graph loop (jittable reference) ----------
+    gen = jax.jit(lambda p, t: engine.generate_batch_sync(
         p, cfg, t, max_new=args.max_new, eos_id=1))
     t0 = time.perf_counter()
     result = gen(params, prompt)
@@ -43,12 +49,33 @@ def main():
 
     print(f"[serve] arch={cfg.name} batch={args.batch} "
           f"prompt={args.prompt_len} max_new={args.max_new}")
-    print(f"[serve] loop ran {int(result.steps)} decode steps "
+    print(f"[serve] batch-sync loop ran {int(result.steps)} decode steps "
           f"(early exit saves {args.max_new - int(result.steps)}) "
           f"in {dt * 1e3:.0f}ms")
     for b in range(args.batch):
+        # lengths counts the EOS token; text_lengths is the usable text.
         toks = result.tokens[b, :int(result.lengths[b])].tolist()
-        print(f"  seq{b} len={int(result.lengths[b])}: {toks[:12]}...")
+        print(f"  seq{b} len={int(result.lengths[b])} "
+              f"text={int(result.text_lengths[b])}: {toks[:12]}...")
+
+    # ---- continuous batching: mixed budgets over a small slot pool -----
+    sched = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=max(2, args.batch // 2),
+        prompt_len=args.prompt_len, max_new_cap=args.max_new, eos_id=1)
+    budgets = [args.max_new if b % 2 else max(1, args.max_new // 4)
+               for b in range(args.batch)]
+    for b in range(args.batch):
+        sched.submit(prompt[b:b + 1], max_new=budgets[b])
+    t0 = time.perf_counter()
+    finished = sched.run_until_drained()
+    dt = time.perf_counter() - t0
+    print(f"[serve] continuous: {sched.n_slots} slots, "
+          f"{sched.total_steps} device steps, "
+          f"occupancy {sched.occupancy * 100:.0f}%, {dt * 1e3:.0f}ms")
+    for f in sorted(finished, key=lambda f: f.request_id):
+        print(f"  req{f.request_id} budget={budgets[f.request_id]} "
+              f"len={f.length} text={f.text_length} "
+              f"eos={f.hit_eos}: {f.tokens[:8].tolist()}...")
 
 
 if __name__ == "__main__":

@@ -29,7 +29,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "BATCH", "SEQ", "ATTN_SEQ", "ACT_SEQ", "EMBED", "MLP", "HEAD", "HEADS",
     "KV_HEADS", "HEAD_DIM", "VOCAB", "EXPERT", "EXPERT_MLP", "INNER",
-    "STATE", "LAYERS", "CACHE_KV", "CACHE_HD", "STAGE",
+    "STATE", "LAYERS", "CACHE_KV", "CACHE_HD", "STAGE", "SLOT",
     "ShardingRules", "resolve_rules", "constrain", "logical_to_sharding",
 ]
 
@@ -56,6 +56,10 @@ LAYERS = "layers"        # stacked-layer leading dim (never sharded)
 CACHE_KV = "cache_kv"    # KV-cache head axis
 CACHE_HD = "cache_hd"    # KV-cache head_dim axis
 STAGE = "stage"          # pipeline stage (repro.dist.pipeline)
+SLOT = "slot"            # serve decode-slot pool (repro.serve.scheduler):
+                         # the cache batch axis of a slot pool — data-
+                         # parallel like BATCH, but named separately so
+                         # slot-pool placement reads as what it is
 
 # Mesh axes batch-like logical axes map onto, outermost first.
 _DATA_AXES = ("pod", "data")
@@ -159,13 +163,16 @@ def resolve_rules(mesh: Optional[Mesh], *, d_model: int = 0, n_heads: int = 0,
     table: Dict[str, MeshAxes] = {a: None for a in (
         BATCH, SEQ, ATTN_SEQ, ACT_SEQ, EMBED, MLP, HEADS, KV_HEADS,
         HEAD_DIM, VOCAB, EXPERT, EXPERT_MLP, INNER, STATE, LAYERS,
-        CACHE_KV, CACHE_HD, STAGE)}
+        CACHE_KV, CACHE_HD, STAGE, SLOT)}
     if mesh is None:
         return ShardingRules(mesh=None, table=table)
 
     data = tuple(a for a in _DATA_AXES if _present(mesh, a))
     if data:
         table[BATCH] = data if len(data) > 1 else data[0]
+        # Serve slot pools are a batch: slots spread over the same
+        # data axes (divisibility re-checked per shape at spec time).
+        table[SLOT] = table[BATCH]
     if _present(mesh, _STAGE_AXIS):
         table[STAGE] = _STAGE_AXIS
 

@@ -48,12 +48,18 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--mesh", default=None,
                     help="e.g. '4,2' => (data,model) or '2,2,2' => "
-                         "(data,model,stage); the stage axis is accepted "
-                         "but the train step does not pipeline over it "
-                         "yet (ROADMAP); default single device")
+                         "(data,model,stage); with a stage axis > 1 and "
+                         "--grad-accum > 1, microbatches route through "
+                         "the dist.pipeline schedule (DESIGN.md §6.2); "
+                         "default single device")
+    ap.add_argument("--grad-accum", type=int, default=0,
+                    help="microbatches per step (0 = config default)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.grad_accum:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, grad_accum=args.grad_accum)
     print(f"[launch.train] {cfg.name}: "
           f"{model_zoo.count_params(cfg) / 1e6:.1f}M params, "
           f"{len(jax.devices())} device(s)")
@@ -65,9 +71,14 @@ def main():
         shape = tuple(int(x) for x in args.mesh.split(","))
         mesh = make_mesh(shape, ("data", "model", "stage")[:len(shape)])
         if len(shape) > 2 and shape[2] > 1:
-            print("[launch.train] note: stage axis accepted but the train "
-                  "step does not pipeline over it yet (see ROADMAP); "
-                  "stage shards will hold replicas")
+            if cfg.grad_accum > 1:
+                print("[launch.train] stage axis: grad-accum microbatches "
+                      "route through the dist.pipeline schedule "
+                      "(train_loop accum='auto')")
+            else:
+                print("[launch.train] note: stage axis without "
+                      "--grad-accum > 1 holds replicas; pass --grad-accum "
+                      "to pipeline microbatches over it")
         rules = model_zoo.make_rules(cfg, mesh)
         param_sh = logical_to_sharding(model_zoo.param_axes(cfg), rules,
                                        mesh)

@@ -137,8 +137,10 @@ def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
 def decode_attention(q, k_cache, v_cache, *, cur_len):
     """Single-position attention against a cache.
 
-    q: (B, 1, H, D); k_cache/v_cache: (B, T, KV, D); cur_len: scalar —
-    number of valid cache positions (includes the current token).
+    q: (B, 1, H, D); k_cache/v_cache: (B, T, KV, D); cur_len: number of
+    valid cache positions (includes the current token) — a scalar, or a
+    (B,) vector of per-row lengths (slot-based continuous batching,
+    where each slot is at a different depth into its sequence).
     """
     B, _, H, D = q.shape
     T, KV = k_cache.shape[1], k_cache.shape[2]
@@ -147,7 +149,10 @@ def decode_attention(q, k_cache, v_cache, *, cur_len):
     qg = (q * scale).reshape(B, KV, G, D)
     s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
                    preferred_element_type=jnp.float32)
-    mask = jnp.arange(T)[None, None, None, :] < cur_len
+    cur = jnp.asarray(cur_len)
+    if cur.ndim == 1:
+        cur = cur[:, None, None, None]
+    mask = jnp.arange(T)[None, None, None, :] < cur
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,

@@ -149,10 +149,17 @@ def _dec_block(lp, x, cfg, rules, enc_out=None, *, mode="full",
                 self_kv["v"], v.astype(self_kv["v"].dtype), 0, axis=1)}
     else:  # decode
         pos = cur_len - 1
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            self_kv["k"], k.astype(self_kv["k"].dtype), pos, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            self_kv["v"], v.astype(self_kv["v"].dtype), pos, axis=1)
+        if jnp.ndim(pos) == 1:  # per-row depths (continuous batching)
+            b_idx = jnp.arange(k.shape[0])
+            kc = self_kv["k"].at[b_idx, pos].set(
+                k[:, 0].astype(self_kv["k"].dtype))
+            vc = self_kv["v"].at[b_idx, pos].set(
+                v[:, 0].astype(self_kv["v"].dtype))
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                self_kv["k"], k.astype(self_kv["k"].dtype), pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                self_kv["v"], v.astype(self_kv["v"].dtype), pos, axis=1)
         new_self = {"k": kc, "v": vc}
         a = attn_lib.decode_attention(q, kc, vc, cur_len=cur_len)
     if stp:

@@ -77,10 +77,17 @@ def sinusoidal_positions(n: int, d: int, dtype=jnp.float32):
 
 
 def sinusoid_at(pos, d: int, dtype=jnp.float32):
-    """Sinusoidal embedding for one (possibly traced) position scalar."""
+    """Sinusoidal embedding at (possibly traced) position(s).
+
+    pos: scalar -> (d,); (B,) vector (per-slot decode positions) -> (B, d).
+    """
     dim = jnp.arange(d // 2, dtype=jnp.float32)
-    angle = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
-    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)]).astype(dtype)
+    inv = jnp.power(10000.0, 2 * dim / d)
+    pos = jnp.asarray(pos)
+    angle = (pos.astype(jnp.float32)[..., None] / inv if pos.ndim
+             else pos.astype(jnp.float32) / inv)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)],
+                           axis=-1).astype(dtype)
 
 
 def swiglu(x, w_gate, w_up, w_down, compute_dtype):

@@ -169,10 +169,20 @@ def attn_apply(p, x, cfg, rules, *, positions, mode: str = "full",
                                 and not seq_tp))
     elif mode == "decode":
         pos = cur_len - 1  # position of the incoming token
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            kv_cache["k"], k.astype(kv_cache["k"].dtype), pos, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            kv_cache["v"], v.astype(kv_cache["v"].dtype), pos, axis=1)
+        if jnp.ndim(pos) == 1:
+            # Per-row positions (slot-based continuous batching): each
+            # cache row advances independently, so the single-token K/V
+            # lands at a different depth per row.
+            b_idx = jnp.arange(k.shape[0])
+            kc = kv_cache["k"].at[b_idx, pos].set(
+                k[:, 0].astype(kv_cache["k"].dtype))
+            vc = kv_cache["v"].at[b_idx, pos].set(
+                v[:, 0].astype(kv_cache["v"].dtype))
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), pos, axis=1)
         new_kv = {"k": kc, "v": vc}
         out = attn_lib.decode_attention(q, kc, vc, cur_len=cur_len)
     else:

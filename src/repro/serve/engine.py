@@ -1,19 +1,33 @@
-"""Serving engine: caches, prefill, single-token decode, and an
-**in-graph generation loop** (``generate``) built on the paper's
-dynamic control flow — the decode loop is a ``repro.core.while_loop``
-with a data-dependent EOS early-exit, the inference-side counterpart of
-the paper's §2.2 applications ("the entire computation stays inside the
-system runtime").
+"""Serving engine: caches, prefill, single-token decode, and the
+**in-graph generation loops** built on the paper's dynamic control
+flow — a ``repro.core.while_loop`` with data-dependent exits, the
+inference-side counterpart of the paper's §2.2 applications ("the
+entire computation stays inside the system runtime").
+
+Two generation paths (DESIGN.md §7):
+
+- ``generate_batch_sync`` — batch-synchronous in-graph loop with
+  per-sequence EOS early exit (jittable reference).
+- ``generate`` — compatibility wrapper over the slot-based
+  continuous-batching scheduler (``repro.serve.scheduler``), which
+  retires and refills decode slots mid-stream.
+
+``decode_step`` accepts a scalar ``cur_len`` (whole batch in lockstep)
+or a per-row vector (slot pool at mixed depths). Every cache leaf
+built by ``make_cache`` carries the batch dim at axis 1 — the
+invariant the scheduler's prefill-into-slot splice relies on.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .. import core
 from ..configs import ModelConfig
@@ -112,8 +126,21 @@ def cache_shardings(cfg: ModelConfig, rules, mesh=None, *,
 
 # =========================== decode steps ===================================
 
+def _decode_positions(cur_len):
+    """(1, 1) positions for a scalar ``cur_len``; (B, 1) for a vector.
+
+    A vector means per-row sequence depths: slot-based continuous
+    batching (``repro.serve.scheduler``) decodes a pool of sequences
+    that each sit at a different position.
+    """
+    cl = jnp.asarray(cur_len)
+    if cl.ndim == 0:
+        return jnp.full((1, 1), cl - 1, jnp.int32)
+    return (cl - 1).astype(jnp.int32)[:, None]
+
+
 def _decode_attn_families(params, cfg, rules, x, cache, cur_len):
-    positions = jnp.full((1, 1), cur_len - 1, jnp.int32)
+    positions = _decode_positions(cur_len)
 
     def f(carry, xs):
         x = carry
@@ -142,7 +169,7 @@ def _decode_ssm(params, cfg, rules, x, cache, cur_len):
 def _decode_hybrid(params, cfg, rules, x, cache, cur_len):
     k = cfg.shared_attn_every
     L = cfg.n_layers
-    positions = jnp.full((1, 1), cur_len - 1, jnp.int32)
+    positions = _decode_positions(cur_len)
     new_attn = cache["attn"]
     new_ssm = cache["ssm"]
     for app, start in enumerate(range(0, L, k)):
@@ -189,7 +216,10 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Any,
                 cur_len, rules=None) -> Tuple[jax.Array, Any]:
     """One new token against a cache of `cur_len - 1` previous positions.
 
-    token: (B, 1) int32. Returns (logits (B, 1, Vp), new_cache).
+    token: (B, 1) int32. ``cur_len`` is a scalar (whole batch at the
+    same depth — the batch-synchronous loop) or a (B,) vector of
+    per-row depths (slot-based continuous batching). Returns
+    (logits (B, 1, Vp), new_cache).
     """
     cdt = cfg.dtype("compute")
     x = jnp.take(params["embed"].astype(cdt), token, axis=0)
@@ -203,7 +233,8 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Any,
     elif fam == "hybrid":
         x, new_cache = _decode_hybrid(params, cfg, rules, x, cache, cur_len)
     elif fam == "audio":
-        x = x + layers.sinusoid_at(cur_len - 1, cfg.d_model, cdt)
+        pe = layers.sinusoid_at(jnp.asarray(cur_len) - 1, cfg.d_model, cdt)
+        x = x + (pe if pe.ndim == 1 else pe[:, None, :])
         x, new_cache = _decode_audio(params, cfg, rules, x, cache, cur_len)
     else:
         raise ValueError(fam)
@@ -314,27 +345,55 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class GenerateResult:
+    """Per-request generation output.
+
+    ``lengths`` **counts the EOS token**: a row that produced 3 text
+    tokens and then EOS has ``lengths == 4`` (``tokens[b, :lengths[b]]``
+    is the full emission, EOS included). ``text_lengths`` is the number
+    of tokens *before* EOS — what callers previously re-derived by
+    hand. A row that never hit EOS has
+    ``lengths == text_lengths == max_new``.
+    """
+
     tokens: jax.Array        # (B, max_new)
-    lengths: jax.Array       # (B,)
+    lengths: jax.Array       # (B,) emitted tokens, EOS included
     steps: jax.Array         # scalar: loop iterations actually run
+    text_lengths: jax.Array  # (B,) tokens before EOS
 
     def tree_flatten(self):
-        return (self.tokens, self.lengths, self.steps), None
+        return (self.tokens, self.lengths, self.steps,
+                self.text_lengths), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
 
-def generate(params, cfg: ModelConfig, prompt: jax.Array, *, max_new: int,
-             eos_id: int = 1, rules=None, prefix_embeds=None, frames=None
-             ) -> GenerateResult:
+def _result_from_tokens(toks, eos_id, steps) -> "GenerateResult":
+    has_eos = (toks == eos_id).any(axis=1)
+    first_eos = jnp.argmax(toks == eos_id, axis=1)
+    lengths = jnp.where(has_eos, first_eos + 1, toks.shape[1])
+    return GenerateResult(tokens=toks, lengths=lengths,
+                          steps=jnp.asarray(steps, jnp.int32),
+                          text_lengths=lengths - has_eos)
+
+
+def generate_batch_sync(params, cfg: ModelConfig, prompt: jax.Array, *,
+                        max_new: int, eos_id: int = 1, rules=None,
+                        prefix_embeds=None, frames=None) -> GenerateResult:
     """Greedy in-graph decode with EOS early exit (dynamic control flow).
 
     The whole loop is one ``repro.core.while_loop``: the predicate is
     data-dependent (all sequences hit EOS → exit early), which is
     impossible with a fixed-length ``lax.scan`` — exactly the paper's
     argument for in-graph dynamic control flow in inference.
+
+    This is the **batch-synchronous** path: the batch is admitted as a
+    whole and the call returns when the slowest sequence finishes, so a
+    freed row idles until the entire batch drains. It remains the
+    jittable reference implementation; traffic serving should use
+    ``repro.serve.scheduler`` (continuous batching), which ``generate``
+    wraps.
     """
     B, S = prompt.shape
     prefix = cfg.n_patches if (cfg.family == "vlm"
@@ -365,7 +424,80 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, max_new: int,
                            cache, out_ta),
         max_iters=max_new, name="generate")
     toks = ta.stack().T                                  # (B, max_new)
-    has_eos = (toks == eos_id).any(axis=1)
-    first_eos = jnp.argmax(toks == eos_id, axis=1)
-    lengths = jnp.where(has_eos, first_eos + 1, toks.shape[1])
-    return GenerateResult(tokens=toks, lengths=lengths, steps=i)
+    return _result_from_tokens(toks, eos_id, i)
+
+
+# Wrapper scheduler reuse: jit caches key on closure identity, so a
+# fresh DecodeScheduler per generate() call would recompile the model
+# every time. Schedulers are cached on the static call signature; each
+# cached scheduler holds its cfg/rules refs, keeping their id()s alive
+# and therefore unambiguous as keys.
+_WRAPPER_SCHEDULERS: "collections.OrderedDict" = collections.OrderedDict()
+_WRAPPER_CACHE_SIZE = 8
+
+
+def clear_generate_cache() -> None:
+    """Drop the wrapper's cached schedulers (device cache pools + the
+    params they reference). Call when done generating to return that
+    memory to the allocator — e.g. before switching to training."""
+    _WRAPPER_SCHEDULERS.clear()
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, *, max_new: int,
+             eos_id: int = 1, rules=None, prefix_embeds=None, frames=None
+             ) -> GenerateResult:
+    """Greedy decode for a batch of prompts (compatibility wrapper).
+
+    Thin wrapper over the slot-based continuous-batching scheduler
+    (``repro.serve.scheduler``): every prompt is submitted as its own
+    request into a pool of ``B`` slots and the pool drains. Per-request
+    greedy tokens are bit-identical to ``generate_batch_sync`` for the
+    row-independent families — a sequence's tokens do not depend on
+    what else shares the pool (tested in
+    ``tests/serve/test_scheduler.py``). The exception is ``moe``:
+    capacity-limited routing groups the whole decode batch, so retired
+    rows' frozen feed tokens can shift the surviving rows' expert
+    assignments relative to the batch-synchronous loop (whose done
+    rows keep evolving) — the same batch-composition coupling MoE
+    decode already has inside one batch. Host-driven (admission
+    happens between device steps), so NOT jittable — jit the
+    scheduler's step function instead, or use ``generate_batch_sync``
+    for a fully in-graph loop.
+
+    Repeat calls with the same (cfg, rules, shapes) reuse a cached
+    scheduler (compiled traces + device cache pool); the cache holds up
+    to ``_WRAPPER_CACHE_SIZE`` pools alive — ``clear_generate_cache()``
+    releases them.
+    """
+    from . import scheduler as sched_lib  # deferred: scheduler imports us
+
+    B, S = prompt.shape
+    prefix = cfg.n_patches if (cfg.family == "vlm"
+                               and prefix_embeds is not None) else 0
+    key = (id(cfg), id(rules), B, S, max_new, int(eos_id), prefix,
+           frames is not None)
+    sched = _WRAPPER_SCHEDULERS.get(key)
+    if sched is None:
+        sched = sched_lib.DecodeScheduler(
+            params, cfg, n_slots=B, prompt_len=S, max_new_cap=max_new,
+            eos_id=eos_id, rules=rules, prefix_len=prefix)
+        _WRAPPER_SCHEDULERS[key] = sched
+        while len(_WRAPPER_SCHEDULERS) > _WRAPPER_CACHE_SIZE:
+            _WRAPPER_SCHEDULERS.popitem(last=False)
+    else:
+        _WRAPPER_SCHEDULERS.move_to_end(key)
+        sched.params = params   # fresh weights reuse the cached traces
+    steps_before = sched.total_steps
+    prompt_np = np.asarray(prompt)   # one transfer, sliced host-side
+    for b in range(B):
+        sched.submit(
+            prompt_np[b:b + 1], max_new=max_new, request_id=b,
+            prefix_embeds=(None if prefix_embeds is None
+                           else prefix_embeds[b:b + 1]),
+            frames=None if frames is None else frames[b:b + 1])
+    finished = sched.run_until_drained()
+    toks = np.full((B, max_new), eos_id, dtype=np.int32)
+    for f in finished:
+        toks[f.request_id, :f.length] = f.tokens
+    return _result_from_tokens(jnp.asarray(toks), eos_id,
+                               sched.total_steps - steps_before)

@@ -1,0 +1,69 @@
+"""Token-sampling policies for the serve layer.
+
+Split out of ``engine.decode_step`` so the decode kernel stays a pure
+logits producer and the policy (greedy, temperature, top-k) composes
+with both serving paths — the batch-synchronous in-graph loop and the
+slot-based continuous-batching scheduler.
+
+PRNG threading: every request carries its own key; the key for the
+token at emission index ``j`` is ``fold_in(request_key, j)``. The
+sampled stream therefore depends only on (request key, logits), never
+on which slot the request landed in or what else shares the pool —
+``same key → same tokens`` is a test invariant
+(``tests/serve/test_scheduler.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Hashable (trace-time static) sampling policy.
+
+    temperature == 0 means greedy argmax (the PRNG key is unused);
+    top_k == 0 disables top-k filtering.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def sample(logits: jax.Array, key, sp: SamplingParams) -> jax.Array:
+    """Sample token ids from ``logits (..., V)`` -> ``(...)`` int32."""
+    if sp.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / sp.temperature
+    if sp.top_k > 0:
+        kth = jax.lax.top_k(scaled, sp.top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def sample_slots(logits: jax.Array, keys: jax.Array,
+                 sp: SamplingParams) -> jax.Array:
+    """Per-slot sampling: ``logits (n_slots, V)``, ``keys (n_slots, 2)``.
+
+    Each slot uses its own request-derived key, so a request's stream
+    is independent of slot placement.
+    """
+    if sp.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(lambda l, k: sample(l, k, sp))(logits, keys)
+
+
+def step_keys(keys: jax.Array, emitted: jax.Array) -> jax.Array:
+    """Fold per-slot emission indices into per-slot request keys.
+
+    keys: (n_slots, 2) uint32; emitted: (n_slots,) int32 — the emission
+    index of the token about to be sampled.
+    """
+    return jax.vmap(jax.random.fold_in)(keys, emitted)

@@ -1,0 +1,586 @@
+"""Slot-based continuous-batching decode scheduler.
+
+The paper's thesis applied to serving: decisions that depend on data —
+a sequence hitting EOS, a slot running out of budget — are made
+**inside the runtime**, not by returning to the client. The engine owns
+a fixed pool of ``n_slots`` decode slots. Each slot is one column of a
+shared KV/SSM cache (batch axis of every cache leaf) plus per-slot
+registers (``cur_len``, ``n_emitted``, ``budget``, ``active``,
+``done``, ``request_id``, PRNG key). Three layers:
+
+1. **In-graph step function** (``_step``): one ``core.while_loop``
+   whose body decodes *all* slots one token (vector ``cur_len`` — every
+   slot sits at a different depth), emits into per-slot output rows,
+   and retires slots **data-dependently** (EOS or budget exhausted →
+   ``active=False, done=True``). The loop predicate is
+   ``any(active) & (idle_slots < want)`` where the host passes
+   ``want = min(admit_threshold, len(queue))`` (or ``n_slots + 1``
+   with an empty queue, reducing the predicate to ``any(active)`` so
+   the drain tail never pauses): the device keeps stepping at full
+   occupancy and returns to the host exactly when enough slots have
+   freed for a scheduling decision to be worth making.
+
+2. **Batched prefill-into-slot** (``_admit``): all queued prompts with
+   a free slot are prefilled together as one ``n_slots``-wide batch and
+   spliced into the pool with one gather+scatter along the cache batch
+   axis (axis 1 of every leaf — an ``engine.make_cache`` invariant).
+   The splice uses a *permutation* of slot indices — admitted requests
+   land in free slots, every other slot rewrites its own column — so
+   admission never moves or re-pads running sequences, and one
+   admission call costs one prefill regardless of how many requests it
+   admits.
+
+3. **Host driver** (``DecodeScheduler``): keeps a FIFO queue, admits
+   between device segments, harvests finished requests. Admission
+   policy is greedy FIFO: every free slot is filled before the next
+   device segment. Host-side busy mirrors avoid device round-trips on
+   the scheduling path.
+
+Per-request greedy outputs are **bit-identical** to the
+batch-synchronous ``engine.generate_batch_sync`` path: decode math is
+row-independent, so a sequence's tokens never depend on pool contents
+(equivalence-tested in ``tests/serve/test_scheduler.py``). Exception:
+MoE decode regroups the pool into one routing group
+(``models.moe.moe_mlp``), whose capacity couples rows — that coupling
+already exists inside a batch-synchronous batch, so it is a property
+of the family, not of this scheduler.
+
+Sharding: the slot pool is just a batch — ``pool_shardings`` maps the
+slot axis onto the data mesh axes via the ``SLOT`` logical axis
+(``repro.dist.sharding``), so an 8-way pool runs 1-slot-per-data-shard
+with the same rules table the training batch uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import core
+from ..dist import sharding as sh
+from . import engine, sampling as sampling_lib
+
+
+# =========================== pool state =====================================
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SlotPool:
+    """Device-resident scheduler state; all leaves are arrays.
+
+    Slot lifecycle: FREE (``~active & ~done``) → RUNNING (``active``,
+    via ``_admit``) → DONE (``done``, retired in-graph on EOS/budget) →
+    FREE (host harvest clears ``done``).
+    """
+
+    cache: Any               # engine.make_cache(cfg, n_slots, max_len)
+    next_token: jax.Array    # (n,) int32 — token to feed the next step
+    cur_len: jax.Array       # (n,) int32 — valid cache positions + 1
+    n_emitted: jax.Array     # (n,) int32 — tokens emitted so far
+    budget: jax.Array        # (n,) int32 — per-request max_new
+    active: jax.Array        # (n,) bool
+    done: jax.Array          # (n,) bool — retired, awaiting harvest
+    request_id: jax.Array    # (n,) int32
+    keys: jax.Array          # (n, 2) uint32 — per-request PRNG keys
+    out: jax.Array           # (n, max_new_cap) int32 — emissions
+    steps: jax.Array         # scalar int32 — decode iterations run
+    slot_steps: jax.Array    # scalar int32 — Σ active slots per iteration
+                             # (in-graph occupancy accounting)
+
+    def tree_flatten(self):
+        return (self.cache, self.next_token, self.cur_len, self.n_emitted,
+                self.budget, self.active, self.done, self.request_id,
+                self.keys, self.out, self.steps, self.slot_steps), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    request_id: int
+    tokens: np.ndarray       # (length,) — EOS included when hit
+    length: int              # emitted tokens, EOS included
+    text_length: int         # tokens before EOS
+    hit_eos: bool
+
+
+@dataclasses.dataclass
+class _Queued:
+    request_id: int
+    prompt: Any              # (1, prompt_len) int32
+    max_new: int
+    key: Any                 # (2,) uint32 or None (derive from rid)
+    prefix_embeds: Any = None
+    frames: Any = None
+
+
+# =========================== shardings ======================================
+
+def pool_shardings(cfg, n_slots: int, max_len: int, max_new_cap: int,
+                   rules, mesh=None):
+    """NamedShardings for a ``SlotPool`` under ``rules``.
+
+    The cache batch axis and every per-slot register shard over the
+    ``SLOT`` logical axis (→ the data mesh axes); non-dividing slot
+    counts fall back to replicated via the dims-aware spec.
+    """
+    axes = engine.make_cache(cfg, 0, 0, mode="axes")
+    slot_axes = jax.tree.map(
+        lambda spec: tuple(sh.SLOT if a == sh.BATCH else a for a in spec),
+        axes, is_leaf=lambda x: isinstance(x, tuple))
+    shapes = engine.make_cache(cfg, n_slots, max_len, mode="abstract")
+    cache_sh = jax.tree.map(
+        lambda spec, leaf: rules.sharding(spec, mesh, dims=leaf.shape),
+        slot_axes, shapes, is_leaf=lambda x: isinstance(x, tuple))
+    vec = rules.sharding((sh.SLOT,), mesh, dims=(n_slots,))
+    rep = rules.sharding((), mesh)
+    return SlotPool(
+        cache=cache_sh, next_token=vec, cur_len=vec, n_emitted=vec,
+        budget=vec, active=vec, done=vec, request_id=vec,
+        keys=rules.sharding((sh.SLOT, None), mesh, dims=(n_slots, 2)),
+        out=rules.sharding((sh.SLOT, None), mesh,
+                           dims=(n_slots, max_new_cap)),
+        steps=rep, slot_steps=rep)
+
+
+# =========================== scheduler ======================================
+
+class DecodeScheduler:
+    """Continuous-batching driver over a fixed slot pool.
+
+    Args:
+      params, cfg: model.
+      n_slots: decode slots (cache batch dim).
+      prompt_len: fixed prompt length; every submitted prompt must be
+        exactly this long (one prefill compilation).
+      max_new_cap: per-slot output buffer capacity; per-request
+        ``max_new`` must not exceed it. ``max_len`` is
+        ``prompt_len + prefix_len + max_new_cap + 1`` — identical to
+        the batch-synchronous sizing, so logits match bitwise.
+      eos_id: retirement token.
+      sampling: ``SamplingParams`` (greedy default).
+      rules / mesh: optional sharding; the pool is placed with
+        ``pool_shardings`` when a mesh is available.
+      prefix_len: VLM patch-prefix length (0 otherwise).
+      seed: base PRNG seed; request r's key is
+        ``fold_in(PRNGKey(seed), r)`` (derived in-graph at admission)
+        unless ``submit`` is given an explicit key.
+    """
+
+    def __init__(self, params, cfg, *, n_slots: int, prompt_len: int,
+                 max_new_cap: int, eos_id: int = 1,
+                 sampling: sampling_lib.SamplingParams =
+                 sampling_lib.SamplingParams(),
+                 rules=None, mesh=None, prefix_len: int = 0, seed: int = 0,
+                 admit_threshold: int = 1):
+        if n_slots < 1 or max_new_cap < 1:
+            raise ValueError("need n_slots >= 1 and max_new_cap >= 1")
+        if not 1 <= admit_threshold <= n_slots:
+            raise ValueError("admit_threshold must be in [1, n_slots]")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.prompt_len = prompt_len
+        self.max_new_cap = max_new_cap
+        self.eos_id = int(eos_id)
+        self.sampling = sampling
+        self.rules = rules
+        self.mesh = mesh if mesh is not None else getattr(rules, "mesh",
+                                                          None)
+        self.prefix_len = prefix_len
+        self.admit_threshold = admit_threshold
+        self.max_len = prompt_len + prefix_len + max_new_cap + 1
+        self._base_key = jax.random.PRNGKey(seed)
+        self._next_rid = 0
+        self.queue: List[_Queued] = []
+        # host mirrors of slot occupancy (kept in lockstep with the
+        # device flags so the scheduling path never blocks on a
+        # device→host read)
+        self._busy = np.zeros(n_slots, bool)
+        # driver stats (busy_slot_steps lives in-graph: pool.slot_steps)
+        self.total_steps = 0          # decode iterations across segments
+        self.tokens_emitted = 0
+
+        self.pool = self._init_pool()
+        self._admit_fn = jax.jit(self._build_admit())
+        self._step_fn = jax.jit(self._build_step())
+
+    # ---------------- pool construction ----------------
+
+    def _init_pool(self) -> SlotPool:
+        n, cap = self.n_slots, self.max_new_cap
+        pool = SlotPool(
+            cache=engine.make_cache(self.cfg, n, self.max_len),
+            next_token=jnp.zeros((n,), jnp.int32),
+            cur_len=jnp.ones((n,), jnp.int32),
+            n_emitted=jnp.zeros((n,), jnp.int32),
+            budget=jnp.zeros((n,), jnp.int32),
+            active=jnp.zeros((n,), bool),
+            done=jnp.zeros((n,), bool),
+            request_id=jnp.full((n,), -1, jnp.int32),
+            keys=jnp.zeros((n, 2), jnp.uint32),
+            out=jnp.zeros((n, cap), jnp.int32),
+            steps=jnp.asarray(0, jnp.int32),
+            slot_steps=jnp.asarray(0, jnp.int32))
+        if self.rules is not None and self.mesh is not None \
+                and self.mesh.size > 1:
+            shd = pool_shardings(self.cfg, n, self.max_len, cap,
+                                 self.rules, self.mesh)
+            pool = jax.tree.map(jax.device_put, pool, shd)
+        return pool
+
+    # ---------------- in-graph admission (batched prefill) ------------
+
+    def _build_admit(self):
+        cfg, rules, sp = self.cfg, self.rules, self.sampling
+        max_len, n = self.max_len, self.n_slots
+        base_key = self._base_key
+
+        def admit(params, pool: SlotPool, prompts, slots, rids, max_news,
+                  keys, derive, mask, prefix_embeds, frames) -> SlotPool:
+            """Admit up to n requests in one prefill.
+
+            prompts (n, L); slots (n,) a PERMUTATION of range(n) whose
+            masked rows are the free slots being filled; mask (n,) bool;
+            derive (n,) bool — fold the request key from ``rids`` (else
+            use ``keys`` as given). Unmasked rows rewrite their own
+            slot's current values, so the call is exact for any k.
+            """
+            cacheB = engine.make_cache(cfg, n, max_len)
+            logits, cacheB = engine.prefill(
+                params, cfg, prompts, cacheB, rules,
+                prefix_embeds=prefix_embeds, frames=frames)
+            rkeys = jnp.where(
+                derive[:, None],
+                jax.vmap(lambda r: jax.random.fold_in(base_key, r))(rids),
+                keys)
+            # Token at emission index 0 comes from the prefill logits.
+            k0 = sampling_lib.step_keys(rkeys, jnp.zeros((n,), jnp.int32))
+            tok0 = sampling_lib.sample_slots(logits[:, -1], k0, sp)
+            prefix = 0
+            if cfg.family == "vlm" and prefix_embeds is not None:
+                prefix = cfg.n_patches
+            cur0 = prompts.shape[1] + prefix + 1
+
+            def splice(full, new):
+                # cache leaves carry the slot dim at axis 1
+                m = mask.reshape((1, n) + (1,) * (full.ndim - 2))
+                old = jnp.take(full, slots, axis=1)
+                upd = jnp.where(m, new.astype(full.dtype), old)
+                return full.at[:, slots].set(upd)
+
+            def sreg(vec, new):
+                m = mask.reshape((n,) + (1,) * (vec.ndim - 1))
+                return vec.at[slots].set(
+                    jnp.where(m, new.astype(vec.dtype), vec[slots]))
+
+            return SlotPool(
+                cache=jax.tree.map(splice, pool.cache, cacheB),
+                next_token=sreg(pool.next_token, tok0),
+                cur_len=sreg(pool.cur_len,
+                             jnp.full((n,), cur0, jnp.int32)),
+                n_emitted=sreg(pool.n_emitted, jnp.zeros((n,), jnp.int32)),
+                budget=sreg(pool.budget, max_news),
+                active=sreg(pool.active, jnp.ones((n,), bool)),
+                done=sreg(pool.done, jnp.zeros((n,), bool)),
+                request_id=sreg(pool.request_id, rids),
+                keys=sreg(pool.keys, rkeys),
+                out=sreg(pool.out, jnp.zeros_like(pool.out)),
+                steps=pool.steps, slot_steps=pool.slot_steps)
+
+        return admit
+
+    # ---------------- in-graph decode segment -------------------------
+
+    def _build_step(self):
+        cfg, rules, sp = self.cfg, self.rules, self.sampling
+        eos_id, cap, n = self.eos_id, self.max_new_cap, self.n_slots
+
+        def step(params, pool: SlotPool, want) -> SlotPool:
+            """One device segment.
+
+            ``want`` (traced scalar) is the number of free slots worth
+            returning to the host for: the loop runs while any slot is
+            active AND fewer than ``want`` slots are idle. The host
+            passes ``min(admit_threshold, len(queue))``, or
+            ``n_slots + 1`` when the queue is empty — then the
+            predicate reduces to ``any(active)`` and the whole drain
+            tail costs one dispatch (a freed slot has no successor, so
+            retirement is no reason to pause; outputs wait for
+            harvest).
+            """
+            def cond_fn(p: SlotPool):
+                idle = n - jnp.sum(p.active).astype(jnp.int32)
+                return jnp.any(p.active) & (idle < want)
+
+            # Entering a segment implies the host harvested the previous
+            # one: clear `done` here (free, in-graph) instead of paying
+            # a host-side dispatch per harvest.
+            pool = dataclasses.replace(pool,
+                                       done=jnp.zeros_like(pool.done))
+            def body_fn(p: SlotPool) -> SlotPool:
+                tok = p.next_token                           # (n,)
+                emit = p.active
+                row = jnp.arange(n)
+                idx = jnp.clip(p.n_emitted, 0, cap - 1)
+                out = p.out.at[row, idx].set(
+                    jnp.where(emit, tok, p.out[row, idx]))
+                n_emitted = p.n_emitted + emit
+                finished = emit & ((tok == eos_id)
+                                   | (n_emitted >= p.budget))
+                active = emit & ~finished
+                # Decode all slots (inactive rows compute garbage that
+                # is masked; their columns are rewritten wholesale on
+                # the next admission).
+                logits, cache = engine.decode_step(
+                    params, cfg, tok[:, None], p.cache, p.cur_len, rules)
+                keys = sampling_lib.step_keys(p.keys, n_emitted)
+                nxt = sampling_lib.sample_slots(logits[:, 0], keys, sp)
+                return SlotPool(
+                    cache=cache,
+                    next_token=jnp.where(active, nxt, tok),
+                    cur_len=p.cur_len + active,
+                    n_emitted=n_emitted,
+                    budget=p.budget,
+                    active=active,
+                    done=p.done | finished,
+                    request_id=p.request_id,
+                    keys=p.keys,
+                    out=out,
+                    steps=p.steps + 1,
+                    slot_steps=p.slot_steps
+                    + jnp.sum(emit).astype(jnp.int32))
+
+            return core.while_loop(cond_fn, body_fn, pool, max_iters=cap,
+                                   name="serve_step")
+
+        return step
+
+    # ---------------- host driver -------------------------------------
+
+    def warmup(self) -> None:
+        """Compile admission + both step variants with no-op calls.
+
+        An all-False admission mask rewrites every slot's own values
+        (identity) and an idle pool makes both while_loop variants
+        exit immediately, so state is unchanged while every trace the
+        serving loop needs is compiled outside the timed path.
+        """
+        if self._busy.any() or self.queue:
+            raise RuntimeError("warmup() must run on an idle scheduler")
+        n, L = self.n_slots, self.prompt_len
+        # dummy extras matching the pool's family, so the trace warmed
+        # here is the one real admissions will hit
+        cdt = self.cfg.dtype("compute")
+        prefix_embeds = (jnp.zeros((n, self.prefix_len,
+                                    self.cfg.d_model), cdt)
+                         if self.prefix_len > 0 else None)
+        frames = (jnp.zeros((n, self.cfg.n_frames, self.cfg.d_model), cdt)
+                  if self.cfg.family == "audio" else None)
+        pool = self._admit_fn(
+            self.params, self.pool, np.zeros((n, L), np.int32),
+            np.arange(n, dtype=np.int32), np.full(n, -1, np.int32),
+            np.zeros(n, np.int32), np.zeros((n, 2), np.uint32),
+            np.zeros(n, bool), np.zeros(n, bool), prefix_embeds, frames)
+        pool = self._step_fn(self.params, pool,
+                             np.int32(self.n_slots + 1))
+        jax.block_until_ready(pool.next_token)
+        self.pool = pool
+
+    @property
+    def free_slots(self) -> int:
+        return int(self.n_slots - self._busy.sum())
+
+    @property
+    def active_count(self) -> int:
+        return int(self._busy.sum())
+
+    @property
+    def pending(self) -> int:
+        """Requests not yet finished (queued + in slots)."""
+        return len(self.queue) + int(self._busy.sum())
+
+    def submit(self, prompt, *, max_new: int, request_id: Optional[int] =
+               None, key=None, prefix_embeds=None, frames=None) -> int:
+        """Queue one request. prompt: (1, prompt_len) int32."""
+        prompt = np.asarray(prompt)
+        if prompt.shape != (1, self.prompt_len):
+            raise ValueError(f"prompt must be (1, {self.prompt_len}); "
+                             f"got {prompt.shape}")
+        if not 1 <= max_new <= self.max_new_cap:
+            raise ValueError(f"max_new must be in [1, {self.max_new_cap}]")
+        # prefix/frames presence must be uniform across the pool: one
+        # admission batch shares a single prefill call, so a bare
+        # request co-admitted with a prefixed one would silently get a
+        # zeros prefix and a shifted cur_len. A pool built with
+        # prefix_len > 0 therefore REQUIRES prefix_embeds on every
+        # request (and an audio pool requires frames); max_len was
+        # sized with prefix_len, so a mismatch would also let late K/V
+        # writes clip silently at the cache boundary.
+        if self.prefix_len > 0:
+            pe = np.shape(prefix_embeds) if prefix_embeds is not None \
+                else None
+            if self.cfg.family != "vlm" or pe is None or \
+                    pe[:2] != (1, self.prefix_len):
+                raise ValueError(
+                    f"this pool was built with prefix_len="
+                    f"{self.prefix_len}: every request needs "
+                    f"prefix_embeds (1, {self.prefix_len}, d); got {pe}")
+        elif prefix_embeds is not None:
+            raise ValueError("prefix_embeds on a pool built with "
+                             "prefix_len=0; pass prefix_len at "
+                             "construction")
+        if self.cfg.family == "audio":
+            if frames is None or np.shape(frames)[:2] != \
+                    (1, self.cfg.n_frames):
+                raise ValueError(
+                    f"audio pool: every request needs frames "
+                    f"(1, {self.cfg.n_frames}, ...); got "
+                    f"{None if frames is None else np.shape(frames)}")
+        elif frames is not None:
+            raise ValueError(f"frames invalid for family "
+                             f"{self.cfg.family!r}")
+        rid = self._next_rid if request_id is None else int(request_id)
+        self._next_rid = max(self._next_rid, rid) + 1
+        self.queue.append(_Queued(rid, prompt, int(max_new), key,
+                                  prefix_embeds, frames))
+        return rid
+
+    def _admit_queued(self) -> int:
+        """Fill every free slot from the queue in ONE batched prefill.
+
+        ``admit_threshold > 1`` coalesces admissions: an admission call
+        costs one fixed-size prefill dispatch however many requests it
+        carries, so waiting for a couple of free slots trades a little
+        occupancy for fewer prefill dispatches (throughput knob for
+        small models / fast steps; keep 1 for latency).
+        """
+        k = min(len(self.queue), self.free_slots)
+        if k == 0:
+            return 0
+        if k < min(self.admit_threshold, len(self.queue)) \
+                and self._busy.any():
+            return 0   # coalesce: keep decoding, admit on a later round
+        n, L = self.n_slots, self.prompt_len
+        batch = [self.queue.pop(0) for _ in range(k)]
+        free = np.nonzero(~self._busy)[0]
+        busy = np.nonzero(self._busy)[0]
+        slots = np.concatenate([free, busy]).astype(np.int32)  # permutation
+        mask = np.zeros(n, bool)
+        mask[:k] = True
+        prompts = np.zeros((n, L), np.int32)
+        rids = np.full(n, -1, np.int32)
+        max_news = np.zeros(n, np.int32)
+        keys = np.zeros((n, 2), np.uint32)
+        derive = np.zeros(n, bool)
+        for i, q in enumerate(batch):
+            prompts[i] = q.prompt[0]
+            rids[i] = q.request_id
+            max_news[i] = q.max_new
+            if q.key is None:
+                derive[i] = True
+            else:
+                keys[i] = np.asarray(q.key, np.uint32)
+        prefix_embeds = frames = None
+        if any(q.prefix_embeds is not None for q in batch):
+            pe0 = next(q.prefix_embeds for q in batch
+                       if q.prefix_embeds is not None)
+            prefix_embeds = np.zeros((n,) + tuple(pe0.shape[1:]),
+                                     np.asarray(pe0).dtype)
+            for i, q in enumerate(batch):
+                if q.prefix_embeds is not None:
+                    prefix_embeds[i] = np.asarray(q.prefix_embeds)[0]
+        if any(q.frames is not None for q in batch):
+            f0 = next(q.frames for q in batch if q.frames is not None)
+            frames = np.zeros((n,) + tuple(f0.shape[1:]),
+                              np.asarray(f0).dtype)
+            for i, q in enumerate(batch):
+                if q.frames is not None:
+                    frames[i] = np.asarray(q.frames)[0]
+        self.pool = self._admit_fn(self.params, self.pool, prompts, slots,
+                                   rids, max_news, keys, derive, mask,
+                                   prefix_embeds, frames)
+        self._busy[free[:k]] = True
+        return k
+
+    def _harvest(self) -> List[FinishedRequest]:
+        done = np.asarray(self.pool.done)
+        if not done.any():
+            return []
+        out = np.asarray(self.pool.out)
+        n_emitted = np.asarray(self.pool.n_emitted)
+        rids = np.asarray(self.pool.request_id)
+        got = []
+        for slot in np.nonzero(done)[0]:
+            length = int(n_emitted[slot])
+            toks = out[slot, :length].copy()
+            hit_eos = length > 0 and int(toks[-1]) == self.eos_id
+            got.append(FinishedRequest(
+                request_id=int(rids[slot]), tokens=toks, length=length,
+                text_length=length - int(hit_eos), hit_eos=hit_eos))
+            self.tokens_emitted += length
+            self._busy[slot] = False
+        # `done` is cleared in-graph at the next segment's entry (the
+        # host has harvested by construction), so no dispatch here.
+        # Results are RETURNED, not archived: a long-running server
+        # must not accumulate every historical token array.
+        return got
+
+    def step(self, expect_arrivals: bool = False) -> List[FinishedRequest]:
+        """One scheduling round: admit → device segment → harvest.
+
+        Returns the requests that finished this round. A round with an
+        empty queue and an idle pool is a no-op. With an empty queue
+        the segment runs in *drain* mode: retirements don't pause the
+        loop (there is nothing to admit), so the whole tail costs one
+        device dispatch — UNLESS ``expect_arrivals`` is set: a driver
+        that knows more requests are coming (an open request queue)
+        passes True so the segment still returns on freed slots and a
+        request arriving mid-drain isn't stuck behind the whole tail.
+        """
+        self._admit_queued()
+        if self.active_count == 0:
+            return []
+        if not self.queue and not expect_arrivals:
+            want = self.n_slots + 1          # drain: never pause
+        else:
+            # Return once enough slots have freed *beyond those already
+            # idle at entry* (idle slots the queue couldn't fill don't
+            # count — an absolute threshold would exit without decoding)
+            fresh = (min(self.admit_threshold, len(self.queue))
+                     if self.queue else self.admit_threshold)
+            want = self.free_slots + fresh
+        self.pool = self._step_fn(self.params, self.pool, np.int32(want))
+        # one post-segment sync (needed before harvest anyway); busy
+        # slot-steps accumulate in-graph next to `steps`
+        self.total_steps = int(self.pool.steps)
+        return self._harvest()
+
+    def run_until_drained(self) -> List[FinishedRequest]:
+        """Drive until queue and pool are empty; returns all finished."""
+        results: List[FinishedRequest] = []
+        while self.pending:
+            before = self.pending
+            results.extend(self.step())
+            if self.pending == before:   # no progress: defensive guard
+                raise RuntimeError("scheduler made no progress")
+        return results
+
+    @property
+    def busy_slot_steps(self) -> int:
+        """Σ over decode iterations of the active-slot count (device
+        counter, accumulated in-graph)."""
+        return int(self.pool.slot_steps)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots busy over all decode steps so far."""
+        if self.total_steps == 0:
+            return 0.0
+        return self.busy_slot_steps / (self.total_steps * self.n_slots)

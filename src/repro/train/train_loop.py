@@ -23,25 +23,102 @@ import jax.numpy as jnp
 
 from .. import core
 from ..checkpointing import checkpoint as ckpt_lib
+from ..dist import pipeline as pipeline_lib
 from ..dist import sharding as sh
 from ..models import model_zoo
 from ..optim import adamw
 
 
 def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, rules=None,
-                    donate: bool = True) -> Callable:
+                    donate: bool = True, accum: str = "auto",
+                    accum_stages: Optional[int] = None) -> Callable:
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     cfg.grad_accum > 1 splits the global batch into microbatches and
     accumulates gradients with an in-graph counted loop (repro.core):
     the per-device live activation working set scales 1/n_micro, which
     is what lets dbrx-scale train_4k fit HBM (EXPERIMENTS.md §Perf).
+
+    ``accum`` picks the microbatch schedule:
+
+    - ``"fori"`` — sequential in-graph counted loop (the historical
+      path; one microbatch's whole fwd+bwd at a time).
+    - ``"pipeline"`` — route the microbatches through the
+      ``dist.pipeline`` schedule: stage ``k`` of the pipeline computes
+      the gradient of microbatch-row-chunk ``k``, so with a ``stage``
+      mesh axis stage ``k`` of microbatch ``i+1`` overlaps stage
+      ``k+1`` of microbatch ``i`` (ROADMAP "pipeline + grad-accum
+      composition"). Gradients equal the sequential path up to fp32
+      reassociation (the mean over a microbatch becomes a mean of
+      equal-size chunk means). MEMORY: the schedule's carry is
+      per-microbatch, so gradient accumulation holds an
+      ``(n_micro, ...)`` fp32 buffer per parameter (~``n_micro``× the
+      fori path, amortized ``1/stage_count`` per stage shard) — folding
+      the reduction into the drain is a ROADMAP follow-up; prefer
+      ``"fori"`` when parameter memory, not schedule overlap, is the
+      binding constraint.
+    - ``"auto"`` — ``"pipeline"`` when the mesh carries a stage axis of
+      size > 1 and grad_accum > 1 (falling back to ``"fori"`` when the
+      microbatch rows don't divide the stage count), else ``"fori"``.
+
+    ``accum_stages`` overrides the stage count (default: the mesh's
+    ``stage`` axis size), mainly for off-mesh equivalence tests.
     """
+    if accum not in ("auto", "fori", "pipeline"):
+        raise ValueError(f"unknown accum {accum!r}")
     n_micro = max(1, cfg.grad_accum)
+    mesh = rules.mesh if rules is not None else None
+    n_stages = (accum_stages if accum_stages is not None
+                else pipeline_lib.stage_count(mesh))
 
     def grads_of(params, batch):
         return jax.value_and_grad(model_zoo.loss_fn, has_aux=True)(
             params, cfg, batch, rules)
+
+    def _accum_fori(params, micro):
+        def body(i, acc):
+            gsum, lsum = acc
+            mb = jax.tree.map(lambda x: x[i], micro)
+            (loss, _), g = grads_of(params, mb)
+            return (jax.tree.map(jnp.add, gsum, g), lsum + loss)
+
+        gz = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, loss_sum = core.fori_loop(
+            0, n_micro, body, (gz, jnp.float32(0.0)))
+        return (jax.tree.map(lambda g: g / n_micro, grads),
+                loss_sum / n_micro)
+
+    def _accum_pipeline(params, micro, n_stages):
+        mb_rows = jax.tree.leaves(micro)[0].shape[1]
+        chunk = mb_rows // n_stages
+
+        # SPMD form (make_pipelined_fn): ONE stage body vmapped over the
+        # stage dim, "stage weights" = the stage index — stage k adds
+        # the gradient of microbatch-row-chunk k into the carry. This is
+        # the form whose rotating buffer shards one-slot-per-stage and
+        # lowers the rotation to collective-permute.
+        def stage_fn(k_idx, c):
+            mb_k = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, k_idx * chunk, chunk, 0), c["mb"])
+            (loss, _), g = grads_of(params, mb_k)
+            return {"mb": c["mb"],
+                    "g": jax.tree.map(jnp.add, c["g"], g),
+                    "loss": c["loss"] + loss}
+
+        fn = pipeline_lib.make_pipelined_fn(stage_fn, mesh,
+                                            parallel_iterations=n_stages)
+        gz = jax.tree.map(
+            lambda p: jnp.zeros((n_micro,) + p.shape, jnp.float32), params)
+        init = {"mb": micro, "g": gz,
+                "loss": jnp.zeros((n_micro,), jnp.float32)}
+        out = fn(jnp.arange(n_stages, dtype=jnp.int32), init)
+        # Each microbatch's carry holds Σ_k grad(chunk-mean_k); the
+        # full-microbatch mean is (1/S)·Σ_k chunk means (equal chunks).
+        denom = n_micro * n_stages
+        return (jax.tree.map(lambda g: g.sum(0) / denom, out["g"]),
+                out["loss"].sum() / denom)
 
     def train_step(params, opt_state, batch):
         # Pin the incoming batch to the data axes (no-op off-mesh) so
@@ -55,19 +132,18 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, rules=None,
             micro = jax.tree.map(
                 lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
                                     *x.shape[1:]), batch)
-
-            def body(i, acc):
-                gsum, lsum = acc
-                mb = jax.tree.map(lambda x: x[i], micro)
-                (loss, _), g = grads_of(params, mb)
-                return (jax.tree.map(jnp.add, gsum, g), lsum + loss)
-
-            gz = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            grads, loss_sum = core.fori_loop(
-                0, n_micro, body, (gz, jnp.float32(0.0)))
-            grads = jax.tree.map(lambda g: g / n_micro, grads)
-            loss = loss_sum / n_micro
+            mb_rows = jax.tree.leaves(micro)[0].shape[1]
+            use_pipe = accum == "pipeline" or (
+                accum == "auto" and n_stages > 1
+                and mb_rows % max(n_stages, 1) == 0)
+            if use_pipe:
+                if mb_rows % n_stages != 0:
+                    raise ValueError(
+                        f"accum='pipeline' needs microbatch rows "
+                        f"({mb_rows}) divisible by stages ({n_stages})")
+                grads, loss = _accum_pipeline(params, micro, n_stages)
+            else:
+                grads, loss = _accum_fori(params, micro)
             metrics = {"loss": loss, "ce": loss}
         params, opt_state, om = adamw.apply(opt_cfg, params, grads,
                                             opt_state)

@@ -157,6 +157,50 @@ class TestStageMesh:
             print("STAGE_MESH_OK")
         """)
 
+    def test_train_step_pipeline_accum_on_stage_mesh(self):
+        """ROADMAP pipeline+grad-accum composition: under a (data,
+        stage) mesh, accum='auto' routes cfg.grad_accum microbatches
+        through pipeline_loop and matches the sequential fori path."""
+        run_ndev("""
+            import dataclasses
+            from repro.configs import get_config
+            from repro.dist import sharding as sh
+            from repro.launch.mesh import make_mesh
+            from repro.models import model_zoo
+            from repro.optim import adamw, schedule
+            from repro.train import train_loop
+
+            cfg = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                                      grad_accum=2)
+            params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+            opt_cfg = adamw.AdamWConfig(lr=1e-3,
+                                        schedule=schedule.constant())
+            opt = adamw.init(params)
+            mesh = make_mesh((2, 4), ("data", "stage"))
+            rules = sh.resolve_rules(mesh, d_model=cfg.d_model,
+                                     n_heads=cfg.n_heads,
+                                     n_kv_heads=cfg.n_kv_heads,
+                                     d_ff=cfg.d_ff,
+                                     vocab=cfg.padded_vocab)
+            from repro.data.pipeline import SyntheticLM
+            batch = SyntheticLM(cfg.vocab, 32, 16, seed=1).batch_at(0)
+            with mesh:
+                auto = jax.jit(train_loop.make_train_step(cfg, opt_cfg,
+                                                          rules))
+                fori = jax.jit(train_loop.make_train_step(cfg, opt_cfg,
+                                                          rules,
+                                                          accum="fori"))
+                p1, _, m1 = auto(params, opt, batch)
+                p2, _, m2 = fori(params, opt, batch)
+            np.testing.assert_allclose(float(m1["loss"]),
+                                       float(m2["loss"]), rtol=1e-3)
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+                np.testing.assert_allclose(np.asarray(a, np.float32),
+                                           np.asarray(b, np.float32),
+                                           rtol=1e-1, atol=2e-3)
+            print("PIPE_ACCUM_OK")
+        """)
+
     def test_distributed_while_barrier(self):
         run_ndev("""
             from repro.dist import pipeline

@@ -75,6 +75,33 @@ def test_generate_early_exit():
     assert (res2.lengths <= 2).all()
 
 
+def test_lengths_count_eos_and_text_lengths():
+    """`lengths` includes the EOS token; `text_lengths` excludes it."""
+    cfg = get_config("smollm-135m", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    prompt = jax.random.randint(KEY, (2, 8), 2, cfg.vocab)
+
+    # forced instant EOS (zero embeddings => argmax = token 0)
+    params0 = dict(params)
+    params0["embed"] = jnp.zeros_like(params["embed"])
+    res = engine.generate(params0, cfg, prompt, max_new=6, eos_id=0)
+    # one emitted token (the EOS itself): lengths=1, text_lengths=0
+    np.testing.assert_array_equal(np.asarray(res.lengths), [1, 1])
+    np.testing.assert_array_equal(np.asarray(res.text_lengths), [0, 0])
+    assert int(res.tokens[0, 0]) == 0        # tokens[:lengths] includes EOS
+
+    # no EOS: lengths == text_lengths == max_new
+    res2 = engine.generate(params, cfg, prompt, max_new=6, eos_id=-1)
+    np.testing.assert_array_equal(np.asarray(res2.lengths), [6, 6])
+    np.testing.assert_array_equal(np.asarray(res2.text_lengths), [6, 6])
+
+    # the batch-sync reference agrees on both fields
+    res3 = engine.generate_batch_sync(params0, cfg, prompt, max_new=6,
+                                      eos_id=0)
+    np.testing.assert_array_equal(np.asarray(res3.lengths), [1, 1])
+    np.testing.assert_array_equal(np.asarray(res3.text_lengths), [0, 0])
+
+
 def test_generate_matches_stepwise_decode():
     cfg = get_config("llama3.2-1b", smoke=True)
     params = model_zoo.init_params(cfg, KEY)

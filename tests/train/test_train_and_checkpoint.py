@@ -61,6 +61,35 @@ class TestTraining:
                                        np.asarray(b, np.float32),
                                        rtol=1e-1, atol=2e-3)
 
+    def test_pipeline_accum_matches_fori(self):
+        """Routing grad-accum microbatches through dist.pipeline
+        (stage k = microbatch row-chunk k) matches the sequential
+        in-graph fori accumulation."""
+        cfg, params, opt_cfg, opt, data = _setup()
+        c2 = dataclasses.replace(cfg, grad_accum=2)
+        batch = data.batch_at(0)        # (4, S): 2 microbatches x 2 rows
+        s_fori = jax.jit(train_loop.make_train_step(c2, opt_cfg,
+                                                    accum="fori"))
+        s_pipe = jax.jit(train_loop.make_train_step(c2, opt_cfg,
+                                                    accum="pipeline",
+                                                    accum_stages=2))
+        p1, _, m1 = s_fori(params, opt, batch)
+        p2, _, m2 = s_pipe(params, opt, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-3)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-1, atol=2e-3)
+
+    def test_pipeline_accum_rejects_undividable_rows(self):
+        cfg, params, opt_cfg, opt, data = _setup()
+        c2 = dataclasses.replace(cfg, grad_accum=2)
+        with pytest.raises(ValueError):
+            train_loop.make_train_step(
+                c2, opt_cfg, accum="pipeline", accum_stages=3)(
+                params, opt, data.batch_at(0))
+
     def test_in_graph_loop_matches_python_loop(self):
         """Paper §2.2 in-graph training loop == step-by-step driving."""
         cfg, params, opt_cfg, opt, data = _setup()

@@ -1,5 +1,5 @@
 """Fault-tolerance demo: train, kill, resume — then resume ELASTICALLY
-on a different device topology (the DESIGN.md §8 story end-to-end).
+on a different device topology (the DESIGN.md §9 story end-to-end).
 
 Phase 1 trains 6 steps and checkpoints at step 4.
 Phase 2 simulates a crash+restart: a fresh Trainer auto-resumes from

@@ -77,6 +77,25 @@ def main():
               f"len={f.length} text={f.text_length} "
               f"eos={f.hit_eos}: {f.tokens[:8].tolist()}...")
 
+    # ---- paged KV cache: memory tracks tokens in flight ----------------
+    # kv="paged" swaps the dense per-slot cache columns for block
+    # tables (DESIGN.md §8): a request holds only the blocks its own
+    # budget needs, so mixed budgets admit more residents per byte.
+    # Greedy tokens are bit-identical to the dense pool above.
+    # (CLI equivalent: python -m repro.launch.serve ... --kv paged)
+    paged = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=max(2, args.batch // 2),
+        prompt_len=args.prompt_len, max_new_cap=args.max_new, eos_id=1,
+        kv="paged", kv_block=8)
+    for b in range(args.batch):
+        paged.submit(prompt[b:b + 1], max_new=budgets[b])
+    pf = {f.request_id: f for f in paged.run_until_drained()}
+    for f in finished:
+        assert pf[f.request_id].tokens.tolist() == f.tokens.tolist()
+    print(f"[serve] paged KV: identical tokens, "
+          f"{paged.free_blocks}/{paged.kv_blocks} blocks back on the "
+          f"free-list ({paged.kv_block} tokens/block)")
+
 
 if __name__ == "__main__":
     main()

@@ -1,6 +1,6 @@
 """Sharded, atomic, async checkpointing with elastic restore.
 
-Scale-out design (DESIGN.md §8):
+Scale-out design (DESIGN.md §9):
 - each host writes only its addressable shards (`host{k}.npz`) — no
   single writer, no cross-host traffic;
 - a manifest (`manifest.json`) is committed last via atomic rename: a

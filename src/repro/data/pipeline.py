@@ -1,6 +1,6 @@
 """Data pipeline: deterministic synthetic LM stream + memmap corpus.
 
-Determinism contract for fault tolerance (DESIGN.md §8): the batch for
+Determinism contract for fault tolerance (DESIGN.md §9): the batch for
 (step, host) is a pure function of (seed, step, host) — a restarted or
 replaced host replays identically, so recovery from a checkpoint at step
 k reproduces the exact token stream from step k+1 onward with no data

@@ -107,6 +107,11 @@ def _run_schedule(advance: Callable, microbatches: Any, n_stages: int,
 
     def body(t, carry):
         buf, out = carry
+        # NOTE: slot accesses on the stage-sharded buffer use the
+        # dynamic slice/update forms, never `a[k]` / `jnp.stack` — see
+        # the concatenate-mispartitioning note in `pipeline_loop`'s
+        # `advance` (the source of the multi-axis-mesh NaNs/garbage
+        # this schedule used to produce).
         # Fill: slot 0 receives microbatch t (no-op once the feed runs dry).
         feed_idx = jnp.clip(t, 0, n_micro - 1)
         mb = jax.tree.map(
@@ -115,14 +120,21 @@ def _run_schedule(advance: Callable, microbatches: Any, n_stages: int,
             microbatches)
         feeding = t < n_micro
         buf = jax.tree.map(
-            lambda b, m: b.at[0].set(jnp.where(feeding, m, b[0])), buf, mb)
+            lambda b, m: jax.lax.dynamic_update_index_in_dim(
+                b, jnp.where(
+                    feeding, m,
+                    jax.lax.dynamic_index_in_dim(b, 0, 0, keepdims=False)),
+                0, axis=0),
+            buf, mb)
         # Advance: every stage processes its slot concurrently.
         y = advance(buf)
         y = _constrain_stage(y, mesh, stage_axis)
         # Drain: the last slot just finished microbatch t - (S - 1).
         done = t >= n_stages - 1
         out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
-        last = jax.tree.map(lambda a: a[-1], y)
+        last = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, n_stages - 1, 0,
+                                                   keepdims=False), y)
         out = jax.tree.map(
             lambda o, l: jax.lax.dynamic_update_index_in_dim(
                 o, jnp.where(
@@ -182,10 +194,31 @@ def pipeline_loop(stage_fns, init: Any, n_microbatches: Optional[int] = None,
     n_stages = len(stage_fns)
 
     def advance(buf):
-        slots = [jax.tree.map(lambda a, k=k: a[k], buf)
-                 for k in range(n_stages)]
+        # Slot access is dynamic-slice / dynamic-update, NEVER `a[k]` /
+        # `jnp.stack`: XLA's SPMD partitioner (GSPMD and Shardy alike)
+        # miscompiles a concatenate whose output is sharded along the
+        # concatenated dim on a multi-axis mesh — each non-stage axis
+        # replica contributes a partial term that gets SUMMED, so a
+        # (data=2, stage) mesh returned exactly 2× the true
+        # activations (and NaNs at scale). The dynamic-slice/scatter
+        # forms partition correctly. Root-caused from the ROADMAP
+        # follow-up; regression test:
+        # tests/dist/test_pipeline.py::TestStageMesh::
+        # test_heterogeneous_multi_axis_mesh. See DESIGN.md §6.2.
+        slots = [jax.tree.map(
+            lambda a, k=k: jax.lax.dynamic_index_in_dim(a, k, 0,
+                                                        keepdims=False),
+            buf) for k in range(n_stages)]
         new = [stage_fns[k](slots[k]) for k in range(n_stages)]
-        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *new)
+
+        def restack(*xs):
+            out = jnp.zeros((n_stages,) + xs[0].shape, xs[0].dtype)
+            for k, x in enumerate(xs):
+                out = jax.lax.dynamic_update_index_in_dim(out, x, k,
+                                                          axis=0)
+            return out
+
+        return jax.tree.map(restack, *new)
 
     return _run_schedule(advance, init, n_stages, mesh, stage_axis,
                          save_policy=save_policy,

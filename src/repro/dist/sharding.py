@@ -29,7 +29,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "BATCH", "SEQ", "ATTN_SEQ", "ACT_SEQ", "EMBED", "MLP", "HEAD", "HEADS",
     "KV_HEADS", "HEAD_DIM", "VOCAB", "EXPERT", "EXPERT_MLP", "INNER",
-    "STATE", "LAYERS", "CACHE_KV", "CACHE_HD", "STAGE", "SLOT",
+    "STATE", "LAYERS", "CACHE_KV", "CACHE_HD", "STAGE", "SLOT", "BLOCK",
     "ShardingRules", "resolve_rules", "constrain", "logical_to_sharding",
 ]
 
@@ -60,6 +60,10 @@ SLOT = "slot"            # serve decode-slot pool (repro.serve.scheduler):
                          # the cache batch axis of a slot pool — data-
                          # parallel like BATCH, but named separately so
                          # slot-pool placement reads as what it is
+BLOCK = "kv_block"       # paged KV-cache physical-block axis
+                         # (repro.serve.kv_cache.PagedKVCache): block
+                         # pools spread over the data axes, the paged
+                         # analogue of sharding dense columns over SLOT
 
 # Mesh axes batch-like logical axes map onto, outermost first.
 _DATA_AXES = ("pod", "data")
@@ -163,7 +167,7 @@ def resolve_rules(mesh: Optional[Mesh], *, d_model: int = 0, n_heads: int = 0,
     table: Dict[str, MeshAxes] = {a: None for a in (
         BATCH, SEQ, ATTN_SEQ, ACT_SEQ, EMBED, MLP, HEADS, KV_HEADS,
         HEAD_DIM, VOCAB, EXPERT, EXPERT_MLP, INNER, STATE, LAYERS,
-        CACHE_KV, CACHE_HD, STAGE, SLOT)}
+        CACHE_KV, CACHE_HD, STAGE, SLOT, BLOCK)}
     if mesh is None:
         return ShardingRules(mesh=None, table=table)
 
@@ -172,7 +176,10 @@ def resolve_rules(mesh: Optional[Mesh], *, d_model: int = 0, n_heads: int = 0,
         table[BATCH] = data if len(data) > 1 else data[0]
         # Serve slot pools are a batch: slots spread over the same
         # data axes (divisibility re-checked per shape at spec time).
+        # Paged KV block pools likewise spread their physical-block
+        # axis over the data axes (repro.serve.kv_cache).
         table[SLOT] = table[BATCH]
+        table[BLOCK] = table[BATCH]
     if _present(mesh, _STAGE_AXIS):
         table[STAGE] = _STAGE_AXIS
 

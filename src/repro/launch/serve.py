@@ -10,6 +10,13 @@ mixed-length traffic.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --smoke --slots 4 --requests 16 --rate 50 --compare
+
+Add ``--kv paged`` to serve from the block-table KV cache
+(``repro.serve.kv_cache``, DESIGN.md §8): cache memory is bounded by
+tokens in flight instead of ``slots x max_len``, so mixed short/long
+traffic fits more resident requests per byte — size the pool with
+``--kv-block`` / ``--kv-blocks``. Greedy outputs are bit-identical to
+the dense default.
 """
 
 import argparse
@@ -57,7 +64,8 @@ def run_continuous(args, cfg, params, workload):
                                  top_k=args.top_k)
     sched = sched_lib.DecodeScheduler(
         params, cfg, n_slots=args.slots, prompt_len=args.prompt_len,
-        max_new_cap=cap, eos_id=args.eos_id, sampling=sp, seed=args.seed)
+        max_new_cap=cap, eos_id=args.eos_id, sampling=sp, seed=args.seed,
+        kv=args.kv, kv_block=args.kv_block, kv_blocks=args.kv_blocks)
     rng = np.random.default_rng(args.seed)
     prompts = {i: rng.integers(2, cfg.vocab,
                                (1, args.prompt_len)).astype(np.int32)
@@ -151,6 +159,15 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv", choices=("dense", "paged"), default="dense",
+                    help="KV-cache layout: 'paged' bounds cache memory "
+                         "by tokens in flight (block tables, "
+                         "DESIGN.md §8) instead of slots x max_len")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="paged cache block size (tokens)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="paged pool capacity in blocks (default: "
+                         "dense-equivalent)")
     ap.add_argument("--compare", action="store_true",
                     help="also run the batch-synchronous baseline")
     args = ap.parse_args()

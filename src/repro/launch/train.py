@@ -10,7 +10,7 @@ logical-axis sharded params, microbatched train step, async sharded
 checkpoints with auto-resume, straggler watchdog, SIGTERM-safe exit.
 
 XLA flags set here are the TPU latency-hiding defaults (compute/comm
-overlap — DESIGN.md §8); they are no-ops on CPU.
+overlap — DESIGN.md §9); they are no-ops on CPU.
 """
 
 import argparse

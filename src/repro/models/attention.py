@@ -134,14 +134,20 @@ def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
     return out.reshape(B, S_valid, H, D).astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, *, cur_len):
-    """Single-position attention against a cache.
+def decode_attention(q, kv, *, cur_len):
+    """Single-position attention against a cache view.
 
-    q: (B, 1, H, D); k_cache/v_cache: (B, T, KV, D); cur_len: number of
-    valid cache positions (includes the current token) — a scalar, or a
-    (B,) vector of per-row lengths (slot-based continuous batching,
-    where each slot is at a different depth into its sequence).
+    q: (B, 1, H, D); ``kv`` is a KV-cache layer view
+    (``repro.serve.kv_cache``) — anything with a ``gather()`` method
+    returning dense ``(B, T, KV, D)`` K and V (dense caches return
+    their arrays as-is; paged caches reconstruct the layout through
+    their block tables, so this function is the single attention path
+    both implementations share). cur_len: number of valid cache
+    positions (includes the current token) — a scalar, or a (B,)
+    vector of per-row lengths (slot-based continuous batching, where
+    each slot is at a different depth into its sequence).
     """
+    k_cache, v_cache = kv.gather()
     B, _, H, D = q.shape
     T, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV

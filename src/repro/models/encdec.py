@@ -4,7 +4,7 @@ The conv frontend is a STUB per the assignment: ``input_specs`` feeds
 precomputed frame embeddings (B, n_frames, d_model). Positions are
 sinusoidal (whisper uses learned decoder positions bounded at 448; the
 assigned decode shapes reach 32k, so we use unbounded sinusoids and
-record the deviation in DESIGN.md §9).
+record the deviation in DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -124,7 +124,14 @@ def encode(params, cfg, frames, rules=None):
 
 def _dec_block(lp, x, cfg, rules, enc_out=None, *, mode="full",
                self_kv=None, cross_kv=None, cur_len=None):
-    """One decoder block. Returns (x, new_self_kv)."""
+    """One decoder block. Returns (x, new_self_kv).
+
+    ``self_kv``/``cross_kv`` are KV-cache layer views
+    (``repro.serve.kv_cache``) bound by the engine — this module never
+    touches raw cache arrays, so dense and paged self-attention caches
+    both flow through unchanged (the cross cache stays dense: it is
+    written once per request at a fixed ``n_frames`` width).
+    """
     cdt = cfg.dtype("compute")
     # -- causal self-attention
     stp = _seq_tp(rules, x.shape[1]) and mode in ("full", "prefill")
@@ -142,26 +149,10 @@ def _dec_block(lp, x, cfg, rules, enc_out=None, *, mode="full",
             q, k, v, causal=True,
             q_chunk=(q.shape[1] if stp else cfg.attn_q_chunk),
             k_chunk=cfg.attn_k_chunk)
-        new_self = {
-            "k": jax.lax.dynamic_update_slice_in_dim(
-                self_kv["k"], k.astype(self_kv["k"].dtype), 0, axis=1),
-            "v": jax.lax.dynamic_update_slice_in_dim(
-                self_kv["v"], v.astype(self_kv["v"].dtype), 0, axis=1)}
+        new_self = self_kv.write_prompt(k, v)
     else:  # decode
-        pos = cur_len - 1
-        if jnp.ndim(pos) == 1:  # per-row depths (continuous batching)
-            b_idx = jnp.arange(k.shape[0])
-            kc = self_kv["k"].at[b_idx, pos].set(
-                k[:, 0].astype(self_kv["k"].dtype))
-            vc = self_kv["v"].at[b_idx, pos].set(
-                v[:, 0].astype(self_kv["v"].dtype))
-        else:
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                self_kv["k"], k.astype(self_kv["k"].dtype), pos, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                self_kv["v"], v.astype(self_kv["v"].dtype), pos, axis=1)
-        new_self = {"k": kc, "v": vc}
-        a = attn_lib.decode_attention(q, kc, vc, cur_len=cur_len)
+        new_self = self_kv.append(k, v, cur_len)
+        a = attn_lib.decode_attention(q, new_self, cur_len=cur_len)
     if stp:
         a = sh.constrain(a, rules, (sh.BATCH, sh.ATTN_SEQ, None, None))
     x = x + _proj_out(lp["self_attn"], a, cfg, x)
@@ -180,8 +171,8 @@ def _dec_block(lp, x, cfg, rules, enc_out=None, *, mode="full",
             a = sh.constrain(a, rules, (sh.BATCH, sh.ATTN_SEQ, None, None))
     else:
         qc, _, _ = _qkv(lp["cross_attn"], h, cfg, kv_x=h)  # kv unused
-        a = attn_lib.decode_attention(qc, cross_kv["k"], cross_kv["v"],
-                                      cur_len=cross_kv["k"].shape[1])
+        a = attn_lib.decode_attention(qc, cross_kv,
+                                      cur_len=cross_kv.k.shape[1])
     x = x + _proj_out(lp["cross_attn"], a, cfg, x)
 
     # -- MLP

@@ -114,7 +114,14 @@ def build_params(cfg, b):
 
 def attn_apply(p, x, cfg, rules, *, positions, mode: str = "full",
                kv_cache=None, cur_len=None):
-    """mode: full | prefill | decode. Returns (out, new_kv | None)."""
+    """mode: full | prefill | decode. Returns (out, new_kv | None).
+
+    ``kv_cache`` (prefill/decode modes) is a KV-cache **layer view**
+    (``repro.serve.kv_cache``): an object with ``write_prompt`` /
+    ``append`` / ``gather``, bound by the engine to this layer's slice
+    of a dense or paged cache. The model never sees raw cache arrays —
+    swapping cache layouts never touches this file.
+    """
     cdt = cfg.dtype("compute")
     xc = x.astype(cdt)
     q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(cdt))
@@ -156,35 +163,19 @@ def attn_apply(p, x, cfg, rules, *, positions, mode: str = "full",
                 skip_masked_blocks=(cfg.attn_skip_masked_blocks
                                     and not seq_tp))
     elif mode == "prefill":
-        S = x.shape[1]
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            kv_cache["k"], k.astype(kv_cache["k"].dtype), 0, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            kv_cache["v"], v.astype(kv_cache["v"].dtype), 0, axis=1)
-        new_kv = {"k": kc, "v": vc}
+        new_kv = kv_cache.write_prompt(k, v)
         out = attn_lib.chunked_attention(
             q, k, v, causal=True, q_chunk=q_chunk_eff,
             k_chunk=cfg.attn_k_chunk,
             skip_masked_blocks=(cfg.attn_skip_masked_blocks
                                 and not seq_tp))
     elif mode == "decode":
-        pos = cur_len - 1  # position of the incoming token
-        if jnp.ndim(pos) == 1:
-            # Per-row positions (slot-based continuous batching): each
-            # cache row advances independently, so the single-token K/V
-            # lands at a different depth per row.
-            b_idx = jnp.arange(k.shape[0])
-            kc = kv_cache["k"].at[b_idx, pos].set(
-                k[:, 0].astype(kv_cache["k"].dtype))
-            vc = kv_cache["v"].at[b_idx, pos].set(
-                v[:, 0].astype(kv_cache["v"].dtype))
-        else:
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                kv_cache["k"], k.astype(kv_cache["k"].dtype), pos, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                kv_cache["v"], v.astype(kv_cache["v"].dtype), pos, axis=1)
-        new_kv = {"k": kc, "v": vc}
-        out = attn_lib.decode_attention(q, kc, vc, cur_len=cur_len)
+        # The incoming token's K/V lands at cur_len - 1 (per-row depths
+        # under slot-based continuous batching); the view routes the
+        # write through whatever layout it owns (dense column scatter,
+        # or paged block-table scatter).
+        new_kv = kv_cache.append(k, v, cur_len)
+        out = attn_lib.decode_attention(q, new_kv, cur_len=cur_len)
     else:
         raise ValueError(mode)
 
@@ -314,7 +305,7 @@ def _embed_tokens(p, tokens, cfg, rules, prefix_embeds=None):
 
 
 def _hybrid_layers(p, x, cfg, rules, block_kw=None):
-    """zamba2: shared attn block every k mamba2 layers (DESIGN.md §9)."""
+    """zamba2: shared attn block every k mamba2 layers (DESIGN.md §10)."""
     k = cfg.shared_attn_every
     L = cfg.n_layers
     aux: Dict[str, jax.Array] = {}

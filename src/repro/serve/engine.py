@@ -12,10 +12,19 @@ Two generation paths (DESIGN.md §7):
   continuous-batching scheduler (``repro.serve.scheduler``), which
   retires and refills decode slots mid-stream.
 
+Self-attention K/V state lives behind the ``repro.serve.kv_cache``
+protocol (DESIGN.md §8): ``make_cache`` builds a family-shaped dict
+whose attention entries are ``KVCache`` objects (dense or paged), and
+the decode/prefill paths thread per-layer **views** of those objects
+through the model code — the model never sees raw cache arrays, so the
+two layouts share every line of attention math. SSM conv/h state and
+the audio cross-attention cache stay plain per-row arrays (they are
+O(1)-per-token or fixed-width — paging buys nothing), with the batch
+dim at axis 1 of every leaf: the invariant the scheduler's admission
+splice relies on for those parts.
+
 ``decode_step`` accepts a scalar ``cur_len`` (whole batch in lockstep)
-or a per-row vector (slot pool at mixed depths). Every cache leaf
-built by ``make_cache`` carries the batch dim at axis 1 — the
-invariant the scheduler's prefill-into-slot splice relies on.
+or a per-row vector (slot pool at mixed depths).
 """
 
 from __future__ import annotations
@@ -33,22 +42,10 @@ from .. import core
 from ..configs import ModelConfig
 from ..dist import sharding as sh
 from ..models import encdec, layers, ssm as ssm_lib, transformer
+from . import kv_cache as kvc
 
 
 # =========================== cache construction =============================
-
-def _kv_struct(cfg, n: int, batch: int, max_len: int, mode: str):
-    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-    shape = (n, batch, max_len, KV, hd)
-    axes = (sh.LAYERS, sh.BATCH, None, sh.CACHE_KV, sh.CACHE_HD)
-    if mode == "abstract":
-        e = jax.ShapeDtypeStruct(shape, cfg.dtype("compute"))
-        return {"k": e, "v": e}
-    if mode == "axes":
-        return {"k": axes, "v": axes}
-    z = jnp.zeros(shape, cfg.dtype("compute"))
-    return {"k": z, "v": z}
-
 
 def _ssm_struct(cfg, batch: int, mode: str):
     s = cfg.ssm
@@ -73,55 +70,98 @@ def _ssm_struct(cfg, batch: int, mode: str):
             "h": jnp.zeros(h_shape, jnp.float32)}
 
 
+def _cross_struct(cfg, batch: int, mode: str):
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, cfg.n_frames, KV, hd)
+    axes = (sh.LAYERS, sh.BATCH, None, sh.CACHE_KV, sh.CACHE_HD)
+    if mode == "abstract":
+        e = jax.ShapeDtypeStruct(shape, cfg.dtype("compute"))
+        return {"k": e, "v": e}
+    if mode == "axes":
+        return {"k": axes, "v": axes}
+    z = jnp.zeros(shape, cfg.dtype("compute"))
+    return {"k": z, "v": z}
+
+
 def _n_shared_apps(cfg) -> int:
     return math.ceil(cfg.n_layers / cfg.shared_attn_every)
 
 
+def kv_key(cfg: ModelConfig) -> Optional[str]:
+    """Cache-dict key of the family's self-attention ``KVCache`` (None
+    for pure-SSM families, which have no attention K/V)."""
+    return {"dense": "attn", "moe": "attn", "vlm": "attn",
+            "hybrid": "attn", "audio": "self", "ssm": None}[cfg.family]
+
+
+def _attn_layer_count(cfg) -> int:
+    return _n_shared_apps(cfg) if cfg.family == "hybrid" else cfg.n_layers
+
+
 def make_cache(cfg: ModelConfig, batch: int, max_len: int,
-               mode: str = "init") -> Any:
-    """mode: init (arrays) | abstract (ShapeDtypeStruct) | axes."""
+               mode: str = "init", *, kv_impl: str = "dense",
+               kv_block: int = 16, kv_blocks: Optional[int] = None) -> Any:
+    """Family-shaped cache dict; attention entries are ``KVCache``s.
+
+    mode: init (arrays) | abstract (ShapeDtypeStruct). ``kv_impl``
+    selects the self-attention cache layout ("dense" | "paged");
+    ``kv_block``/``kv_blocks`` size the paged pool (``kv_blocks=None``
+    defaults to dense-equivalent capacity).
+    """
+    if mode not in ("init", "abstract"):
+        raise ValueError(f"make_cache mode {mode!r}")
+    abstract = mode == "abstract"
     fam = cfg.family
+
+    def attn(n_layers):
+        return kvc.make_kv_cache(cfg, n_layers, batch, max_len,
+                                 impl=kv_impl, block=kv_block,
+                                 n_blocks=kv_blocks, abstract=abstract)
+
     if fam in ("dense", "moe", "vlm"):
-        n = cfg.n_layers
-        return {"attn": _kv_struct(cfg, n, batch, max_len, mode)}
+        return {"attn": attn(cfg.n_layers)}
     if fam == "ssm":
         return {"ssm": _ssm_struct(cfg, batch, mode)}
     if fam == "hybrid":
-        return {"attn": _kv_struct(cfg, _n_shared_apps(cfg), batch, max_len,
-                                   mode),
+        return {"attn": attn(_n_shared_apps(cfg)),
                 "ssm": _ssm_struct(cfg, batch, mode)}
     if fam == "audio":
-        KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-        cross_shape = (cfg.n_layers, batch, cfg.n_frames, KV, hd)
-        cross_axes = (sh.LAYERS, sh.BATCH, None, sh.CACHE_KV, sh.CACHE_HD)
-        if mode == "abstract":
-            ce = jax.ShapeDtypeStruct(cross_shape, cfg.dtype("compute"))
-            cross = {"k": ce, "v": ce}
-        elif mode == "axes":
-            cross = {"k": cross_axes, "v": cross_axes}
-        else:
-            cz = jnp.zeros(cross_shape, cfg.dtype("compute"))
-            cross = {"k": cz, "v": cz}
-        return {"self": _kv_struct(cfg, cfg.n_layers, batch, max_len, mode),
-                "cross": cross}
+        return {"self": attn(cfg.n_layers),
+                "cross": _cross_struct(cfg, batch, mode)}
     raise ValueError(fam)
 
 
 def cache_shardings(cfg: ModelConfig, rules, mesh=None, *,
-                    batch_sharded: bool = True) -> Any:
-    """NamedShardings for the serve cache under ``rules``.
+                    batch_sharded: bool = True, cache: Any = None,
+                    row_axis: Optional[str] = "__default__") -> Any:
+    """NamedShardings matching a ``make_cache`` tree under ``rules``.
 
-    ``batch_sharded=False`` replicates the batch dim (callers whose
+    ``batch_sharded=False`` replicates the per-row dim (callers whose
     serving batch does not divide the data axes, e.g. dry-run cells).
+    ``cache`` (optional) is an existing cache tree — real or abstract —
+    to mirror; required when it is not the dense default. ``row_axis``
+    overrides the logical axis the per-row dim maps to (the scheduler
+    passes ``SLOT``); the default derives it from ``batch_sharded``.
     """
-    axes = make_cache(cfg, 0, 0, mode="axes")
+    if cache is None:
+        cache = make_cache(cfg, 0, 0, mode="abstract")
+    if row_axis == "__default__":
+        row_axis = sh.BATCH if batch_sharded else None
 
-    def fix(spec):
-        if not batch_sharded:
-            spec = tuple(None if a == sh.BATCH else a for a in spec)
-        return rules.sharding(spec, mesh)
+    def fix(spec, leaf):
+        spec = tuple(row_axis if a == sh.BATCH else a for a in spec)
+        return rules.sharding(spec, mesh, dims=leaf.shape)
 
-    return jax.tree.map(fix, axes, is_leaf=lambda x: isinstance(x, tuple))
+    out = {}
+    for key, node in cache.items():
+        if isinstance(node, kvc.KVCache):
+            out[key] = node.shardings(rules, mesh, row_axis=row_axis)
+        else:
+            axes = (_ssm_struct if key == "ssm" else _cross_struct)(
+                cfg, 0, "axes")
+            out[key] = jax.tree.map(fix, axes, node,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return out
 
 
 # =========================== decode steps ===================================
@@ -141,17 +181,18 @@ def _decode_positions(cur_len):
 
 def _decode_attn_families(params, cfg, rules, x, cache, cur_len):
     positions = _decode_positions(cur_len)
+    node = cache["attn"]
 
     def f(carry, xs):
         x = carry
-        lp, kv = xs
-        x, new_kv, _ = transformer.attn_block(
+        lp, leaves = xs
+        x, new_view, _ = transformer.attn_block(
             lp, x, cfg, rules, positions=positions, mode="decode",
-            kv_cache=kv, cur_len=cur_len)
-        return x, new_kv
+            kv_cache=node.view(leaves), cur_len=cur_len)
+        return x, new_view.leaves
 
-    x, new_attn = jax.lax.scan(f, x, (params["layers"], cache["attn"]))
-    return x, {"attn": new_attn}
+    x, new_leaves = jax.lax.scan(f, x, (params["layers"], node.layers))
+    return x, {"attn": node.with_layers(new_leaves)}
 
 
 def _decode_ssm(params, cfg, rules, x, cache, cur_len):
@@ -170,15 +211,13 @@ def _decode_hybrid(params, cfg, rules, x, cache, cur_len):
     k = cfg.shared_attn_every
     L = cfg.n_layers
     positions = _decode_positions(cur_len)
-    new_attn = cache["attn"]
+    node = cache["attn"]
     new_ssm = cache["ssm"]
     for app, start in enumerate(range(0, L, k)):
-        kv = jax.tree.map(lambda a: a[app], cache["attn"])
-        x, nkv, _ = transformer.attn_block(
+        x, new_view, _ = transformer.attn_block(
             params["shared_attn"], x, cfg, rules, positions=positions,
-            mode="decode", kv_cache=kv, cur_len=cur_len)
-        new_attn = jax.tree.map(lambda full, n: full.at[app].set(n),
-                                new_attn, nkv)
+            mode="decode", kv_cache=node.view_at(app), cur_len=cur_len)
+        node = node.set_at(app, new_view)
         stop = min(start + k, L)
         seg_p = jax.tree.map(lambda a: a[start:stop], params["layers"])
         seg_s = jax.tree.map(lambda a: a[start:stop], cache["ssm"])
@@ -195,21 +234,24 @@ def _decode_hybrid(params, cfg, rules, x, cache, cur_len):
             lambda full, n: jax.lax.dynamic_update_slice_in_dim(
                 full, n.astype(full.dtype), start, axis=0),
             new_ssm, seg_new)
-    return x, {"attn": new_attn, "ssm": new_ssm}
+    return x, {"attn": node, "ssm": new_ssm}
 
 
 def _decode_audio(params, cfg, rules, x, cache, cur_len):
+    node = cache["self"]
+
     def f(carry, xs):
         x = carry
-        lp, self_kv, cross_kv = xs
-        x, new_self = encdec._dec_block(
-            lp, x, cfg, rules, mode="decode", self_kv=self_kv,
-            cross_kv=cross_kv, cur_len=cur_len)
-        return x, new_self
+        lp, leaves, cross = xs
+        x, new_view = encdec._dec_block(
+            lp, x, cfg, rules, mode="decode", self_kv=node.view(leaves),
+            cross_kv=kvc.DenseView(cross["k"], cross["v"]), cur_len=cur_len)
+        return x, new_view.leaves
 
-    x, new_self = jax.lax.scan(
-        f, x, (params["decoder"], cache["self"], cache["cross"]))
-    return x, {"self": new_self, "cross": cache["cross"]}
+    x, new_leaves = jax.lax.scan(
+        f, x, (params["decoder"], node.layers, cache["cross"]))
+    return x, {"self": node.with_layers(new_leaves),
+               "cross": cache["cross"]}
 
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Any,
@@ -254,9 +296,19 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Any,
 # =========================== prefill ========================================
 
 def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
-            rules=None, prefix_embeds=None, frames=None
-            ) -> Tuple[jax.Array, Any]:
-    """Prime the cache with a full prompt; returns (logits, new_cache)."""
+            rules=None, prefix_embeds=None, frames=None, *,
+            rows=None, mask=None) -> Tuple[jax.Array, Any]:
+    """Prime the cache with a full prompt; returns (logits, new_cache).
+
+    ``rows``/``mask`` (optional) bind prompt-batch row ``i`` to cache
+    row ``rows[i]``, writing only masked rows — the scheduler's
+    prefill-into-slot admission. Attention ``KVCache`` entries are
+    written **in place at those rows** (a no-op for unmasked rows); SSM
+    and audio-cross entries are returned as FRESH prompt-batch-wide
+    state — the in-graph admission splices those along their batch
+    axis. With ``rows=None`` (batch-synchronous path) prompt row b is
+    cache row b and every entry lines up dense.
+    """
     cdt = cfg.dtype("compute")
     fam = cfg.family
     x = jnp.take(params["embed"].astype(cdt), tokens, axis=0)
@@ -267,15 +319,17 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
     positions = jnp.arange(S)[None]
 
     if fam in ("dense", "moe", "vlm"):
+        node = cache["attn"]
+
         def f(carry, xs):
             x = carry
-            lp, kv = xs
-            x, new_kv, _ = transformer.attn_block(
+            lp, leaves = xs
+            x, new_view, _ = transformer.attn_block(
                 lp, x, cfg, rules, positions=positions, mode="prefill",
-                kv_cache=kv)
-            return x, new_kv
-        x, new_attn = jax.lax.scan(f, x, (params["layers"], cache["attn"]))
-        new_cache = {"attn": new_attn}
+                kv_cache=node.view(leaves, rows=rows, mask=mask))
+            return x, new_view.leaves
+        x, new_leaves = jax.lax.scan(f, x, (params["layers"], node.layers))
+        new_cache = {"attn": node.with_layers(new_leaves)}
     elif fam == "ssm":
         def f(carry, lp):
             x = carry
@@ -289,14 +343,14 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
     elif fam == "hybrid":
         k = cfg.shared_attn_every
         L = cfg.n_layers
-        new_attn, new_ssm = cache["attn"], cache["ssm"]
+        node = cache["attn"]
+        new_ssm = cache["ssm"]
         for app, start in enumerate(range(0, L, k)):
-            kv = jax.tree.map(lambda a: a[app], cache["attn"])
-            x, nkv, _ = transformer.attn_block(
+            x, new_view, _ = transformer.attn_block(
                 params["shared_attn"], x, cfg, rules, positions=positions,
-                mode="prefill", kv_cache=kv)
-            new_attn = jax.tree.map(lambda full, n: full.at[app].set(n),
-                                    new_attn, nkv)
+                mode="prefill", kv_cache=node.view_at(app, rows=rows,
+                                                      mask=mask))
+            node = node.set_at(app, new_view)
             stop = min(start + k, L)
             seg_p = jax.tree.map(lambda a: a[start:stop], params["layers"])
 
@@ -311,20 +365,22 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
                 lambda full, n: jax.lax.dynamic_update_slice_in_dim(
                     full, n.astype(full.dtype), start, axis=0),
                 new_ssm, seg_new)
-        new_cache = {"attn": new_attn, "ssm": new_ssm}
+        new_cache = {"attn": node, "ssm": new_ssm}
     elif fam == "audio":
         enc_out = encdec.encode(params, cfg, frames, rules)
         cross = encdec.cross_kv(params, cfg, enc_out)
         x = x + layers.sinusoidal_positions(S, cfg.d_model, cdt)
+        node = cache["self"]
 
         def f(carry, xs):
             x = carry
-            lp, self_kv = xs
-            x, new_self = encdec._dec_block(
-                lp, x, cfg, rules, enc_out, mode="prefill", self_kv=self_kv)
-            return x, new_self
-        x, new_self = jax.lax.scan(f, x, (params["decoder"], cache["self"]))
-        new_cache = {"self": new_self, "cross": cross}
+            lp, leaves = xs
+            x, new_view = encdec._dec_block(
+                lp, x, cfg, rules, enc_out, mode="prefill",
+                self_kv=node.view(leaves, rows=rows, mask=mask))
+            return x, new_view.leaves
+        x, new_leaves = jax.lax.scan(f, x, (params["decoder"], node.layers))
+        new_cache = {"self": node.with_layers(new_leaves), "cross": cross}
     else:
         raise ValueError(fam)
 
@@ -380,7 +436,9 @@ def _result_from_tokens(toks, eos_id, steps) -> "GenerateResult":
 
 def generate_batch_sync(params, cfg: ModelConfig, prompt: jax.Array, *,
                         max_new: int, eos_id: int = 1, rules=None,
-                        prefix_embeds=None, frames=None) -> GenerateResult:
+                        prefix_embeds=None, frames=None,
+                        kv_impl: str = "dense", kv_block: int = 16
+                        ) -> GenerateResult:
     """Greedy in-graph decode with EOS early exit (dynamic control flow).
 
     The whole loop is one ``repro.core.while_loop``: the predicate is
@@ -393,13 +451,20 @@ def generate_batch_sync(params, cfg: ModelConfig, prompt: jax.Array, *,
     freed row idles until the entire batch drains. It remains the
     jittable reference implementation; traffic serving should use
     ``repro.serve.scheduler`` (continuous batching), which ``generate``
-    wraps.
+    wraps. ``kv_impl`` selects the cache layout — "paged" runs the
+    block-table cache at dense-equivalent capacity, which the
+    equivalence tests use to pin bit-identical greedy tokens.
     """
     B, S = prompt.shape
     prefix = cfg.n_patches if (cfg.family == "vlm"
                                and prefix_embeds is not None) else 0
     max_len = S + prefix + max_new + 1
-    cache = make_cache(cfg, B, max_len)
+    cache = make_cache(cfg, B, max_len, kv_impl=kv_impl, kv_block=kv_block)
+    key = kv_key(cfg)
+    if key is not None:
+        # Batch-sync admits every row up front with the full budget.
+        cache[key] = cache[key].alloc(jnp.arange(B, dtype=jnp.int32),
+                                      jnp.full((B,), max_len, jnp.int32))
     logits, cache = prefill(params, cfg, prompt, cache, rules,
                             prefix_embeds=prefix_embeds, frames=frames)
     first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
@@ -444,8 +509,8 @@ def clear_generate_cache() -> None:
 
 
 def generate(params, cfg: ModelConfig, prompt: jax.Array, *, max_new: int,
-             eos_id: int = 1, rules=None, prefix_embeds=None, frames=None
-             ) -> GenerateResult:
+             eos_id: int = 1, rules=None, prefix_embeds=None, frames=None,
+             kv_impl: str = "dense", kv_block: int = 16) -> GenerateResult:
     """Greedy decode for a batch of prompts (compatibility wrapper).
 
     Thin wrapper over the slot-based continuous-batching scheduler
@@ -475,12 +540,13 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, max_new: int,
     prefix = cfg.n_patches if (cfg.family == "vlm"
                                and prefix_embeds is not None) else 0
     key = (id(cfg), id(rules), B, S, max_new, int(eos_id), prefix,
-           frames is not None)
+           frames is not None, kv_impl, kv_block)
     sched = _WRAPPER_SCHEDULERS.get(key)
     if sched is None:
         sched = sched_lib.DecodeScheduler(
             params, cfg, n_slots=B, prompt_len=S, max_new_cap=max_new,
-            eos_id=eos_id, rules=rules, prefix_len=prefix)
+            eos_id=eos_id, rules=rules, prefix_len=prefix,
+            kv=kv_impl, kv_block=kv_block)
         _WRAPPER_SCHEDULERS[key] = sched
         while len(_WRAPPER_SCHEDULERS) > _WRAPPER_CACHE_SIZE:
             _WRAPPER_SCHEDULERS.popitem(last=False)

@@ -1,0 +1,525 @@
+"""KV cache as an API: interchangeable dense / paged implementations.
+
+The serving story of the paper (§4.3, §6) is that data-dependent loops
+let memory track *actual* work. PR-2's scheduler still allocated every
+decode slot a dense ``max_len`` cache column, so one long-``max_new``
+request sized the whole pool. This module makes the cache an explicit
+protocol with two implementations (DESIGN.md §8):
+
+- ``DenseKVCache`` — the reference: per-row columns
+  ``(L, n_rows, max_len, KV, hd)``, extracted verbatim from the old
+  ``engine.make_cache`` tuple plumbing. Zero indirection; memory is
+  ``n_rows × max_len`` regardless of occupancy.
+- ``PagedKVCache`` — vLLM-style block tables: fixed-size blocks in a
+  shared pool ``(L, n_blocks, block, KV, hd)``, a per-row block table
+  ``(n_rows, blocks_per_row)`` and an in-graph free-list (the ``owner``
+  vector). ``alloc``/``free`` are pure array ops, so admission and
+  retirement stay inside the runtime: a retired slot's blocks are
+  reusable by the very next admission, and pool capacity is bounded by
+  *tokens in flight*, not ``n_rows × max_len``.
+
+Both are registered pytrees, so a cache rides through ``jax.jit`` /
+``repro.core.while_loop`` carries unchanged (the scheduler's
+``SlotPool.cache`` is one of these).
+
+Layout invariants:
+
+- Per-layer state is scanned: ``cache.layers`` is a pytree whose leaves
+  carry the layer dim in front, ``cache.view(leaves)`` binds one
+  layer's state into a ``view`` with ``write_prompt`` / ``append`` /
+  ``gather``, and ``cache.with_layers(stacked)`` rebuilds the cache
+  from the scan's stacked outputs. Block tables are **shared across
+  layers** (row r's logical block b lives at the same physical id in
+  every layer's pool), which is what lets the per-layer view be a pure
+  pool slice.
+- Greedy decode through ``PagedKVCache`` is bit-identical to
+  ``DenseKVCache``: ``gather`` reconstructs the dense ``(n, max_len)``
+  key/value layout (same lanes, same values; unallocated lanes carry
+  garbage that the attention mask hits with the same ``NEG_INF`` it
+  uses for dense out-of-range lanes), so the attention math sees
+  byte-identical inputs at every valid lane.
+- All writes route out-of-range / unallocated positions to index
+  ``n_blocks`` and scatter with ``mode="drop"`` — a retired row whose
+  table was freed appends nowhere instead of corrupting a recycled
+  block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist import sharding as sh
+
+__all__ = ["KVCache", "DenseKVCache", "PagedKVCache", "DenseView",
+           "PagedView", "blocks_needed", "make_kv_cache"]
+
+
+def blocks_needed(n_tokens, block: int):
+    """Blocks covering ``n_tokens`` cache positions (array or int)."""
+    return -(-n_tokens // block)
+
+
+def _bcast_rows(rows: Optional[jax.Array], n: int) -> jax.Array:
+    return jnp.arange(n, dtype=jnp.int32) if rows is None \
+        else jnp.asarray(rows, jnp.int32)
+
+
+# =========================== per-layer views ================================
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DenseView:
+    """One layer of a dense cache: ``k``/``v`` are ``(n, T, KV, hd)``.
+
+    ``rows``/``mask`` (optional) bind which cache rows a prompt batch
+    writes into — ``rows`` is a permutation of ``range(n)`` and masked
+    rows are the ones actually admitted (the scheduler's
+    prefill-into-slot path); ``rows=None`` means the identity (the
+    batch-synchronous path, where batch row b IS cache row b).
+    """
+
+    k: jax.Array
+    v: jax.Array
+    rows: Optional[jax.Array] = None
+    mask: Optional[jax.Array] = None
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.rows, self.mask), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def leaves(self):
+        return {"k": self.k, "v": self.v}
+
+    def write_prompt(self, k: jax.Array, v: jax.Array) -> "DenseView":
+        """Write prompt K/V at positions ``[0, S)`` of the bound rows."""
+        kd, vd = k.astype(self.k.dtype), v.astype(self.v.dtype)
+        if self.rows is None and self.mask is None:
+            kc = jax.lax.dynamic_update_slice_in_dim(self.k, kd, 0, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(self.v, vd, 0, axis=1)
+        else:
+            S = k.shape[1]
+            rows = _bcast_rows(self.rows, k.shape[0])
+            m = (jnp.ones((k.shape[0],), bool) if self.mask is None
+                 else self.mask)[:, None, None, None]
+            kc = self.k.at[rows, :S].set(
+                jnp.where(m, kd, self.k[rows, :S]))
+            vc = self.v.at[rows, :S].set(
+                jnp.where(m, vd, self.v[rows, :S]))
+        return dataclasses.replace(self, k=kc, v=vc)
+
+    def append(self, k: jax.Array, v: jax.Array, cur_len) -> "DenseView":
+        """Write the single-token K/V ``(n, 1, KV, hd)`` at
+        ``cur_len - 1`` (scalar: whole batch in lockstep; vector:
+        per-row depths, the slot-pool path). Bound ``rows``/``mask``
+        are honored like every other view write."""
+        pos = jnp.asarray(cur_len) - 1
+        kd, vd = k.astype(self.k.dtype), v.astype(self.v.dtype)
+        bound = self.rows is not None or self.mask is not None
+        if pos.ndim == 1 or bound:
+            n = k.shape[0]
+            rows = _bcast_rows(self.rows, n)
+            if pos.ndim == 0:
+                pos = jnp.full((n,), pos, jnp.int32)
+            if self.mask is None:
+                uk, uv = kd[:, 0], vd[:, 0]
+            else:   # masked rows keep their current values
+                m = self.mask[:, None, None]
+                uk = jnp.where(m, kd[:, 0], self.k[rows, pos])
+                uv = jnp.where(m, vd[:, 0], self.v[rows, pos])
+            kc = self.k.at[rows, pos].set(uk)
+            vc = self.v.at[rows, pos].set(uv)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(self.k, kd, pos,
+                                                     axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(self.v, vd, pos,
+                                                     axis=1)
+        return dataclasses.replace(self, k=kc, v=vc)
+
+    def gather(self) -> Tuple[jax.Array, jax.Array]:
+        """Dense ``(n, T, KV, hd)`` K and V (identity for this impl)."""
+        return self.k, self.v
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedView:
+    """One layer of a paged cache: pool slices plus the shared table.
+
+    ``k_pool``/``v_pool``: ``(n_blocks, block, KV, hd)``. ``table``:
+    ``(n_rows, blocks_per_row)`` physical block ids, ``-1`` where
+    unallocated. ``max_len`` (static) is the logical per-row width
+    ``gather`` reconstructs — matching the dense layout exactly.
+    """
+
+    k_pool: jax.Array
+    v_pool: jax.Array
+    table: jax.Array
+    max_len: int = 0
+    rows: Optional[jax.Array] = None
+    mask: Optional[jax.Array] = None
+
+    def tree_flatten(self):
+        return (self.k_pool, self.v_pool, self.table, self.rows,
+                self.mask), (self.max_len,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kp, vp, t, rows, mask = children
+        return cls(kp, vp, t, aux[0], rows, mask)
+
+    @property
+    def leaves(self):
+        # The table is NOT a per-layer leaf: appends never change it.
+        return {"k": self.k_pool, "v": self.v_pool}
+
+    @property
+    def block(self) -> int:
+        return self.k_pool.shape[1]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.k_pool.shape[0]
+
+    def _phys(self, rows, pos):
+        """Physical (block, offset) for logical positions; unallocated
+        positions map to block id ``n_blocks`` (dropped on scatter)."""
+        blk = self.table[rows, pos // self.block]
+        return jnp.where(blk >= 0, blk, self.n_blocks), pos % self.block
+
+    def write_prompt(self, k: jax.Array, v: jax.Array) -> "PagedView":
+        n, S = k.shape[0], k.shape[1]
+        rows = _bcast_rows(self.rows, n)
+        pos = jnp.arange(S, dtype=jnp.int32)
+        blk, off = self._phys(rows[:, None], pos[None, :])     # (n, S)
+        if self.mask is not None:
+            blk = jnp.where(self.mask[:, None], blk, self.n_blocks)
+        fb = blk.reshape(-1)
+        fo = jnp.broadcast_to(off, (n, S)).reshape(-1)
+        kp = self.k_pool.at[fb, fo].set(
+            k.astype(self.k_pool.dtype).reshape((n * S,) + k.shape[2:]),
+            mode="drop")
+        vp = self.v_pool.at[fb, fo].set(
+            v.astype(self.v_pool.dtype).reshape((n * S,) + v.shape[2:]),
+            mode="drop")
+        return dataclasses.replace(self, k_pool=kp, v_pool=vp)
+
+    def append(self, k: jax.Array, v: jax.Array, cur_len) -> "PagedView":
+        n = k.shape[0]
+        pos = jnp.asarray(cur_len) - 1
+        if pos.ndim == 0:
+            pos = jnp.full((n,), pos, jnp.int32)
+        rows = _bcast_rows(self.rows, n)
+        blk, off = self._phys(rows, pos.astype(jnp.int32))
+        if self.mask is not None:
+            blk = jnp.where(self.mask, blk, self.n_blocks)
+        kp = self.k_pool.at[blk, off].set(k[:, 0].astype(self.k_pool.dtype),
+                                          mode="drop")
+        vp = self.v_pool.at[blk, off].set(v[:, 0].astype(self.v_pool.dtype),
+                                          mode="drop")
+        return dataclasses.replace(self, k_pool=kp, v_pool=vp)
+
+    def gather(self) -> Tuple[jax.Array, jax.Array]:
+        """Reconstruct the dense ``(n_rows, max_len, KV, hd)`` layout.
+
+        Unallocated table entries clip to block 0: those lanes carry
+        garbage exactly where the dense cache carries stale/zero data —
+        both are masked by ``cur_len`` before the softmax, so valid
+        lanes are byte-identical to the dense path.
+
+        This is the XLA-portable REFERENCE form: it pays a transient
+        dense-layout K/V per layer per decode step, buying the
+        bit-identical-to-dense guarantee the equivalence tests pin.
+        The production form — a Pallas paged-attention decode kernel
+        whose score loop indexes (table, pool) directly and never
+        materializes the dense layout — is a ROADMAP follow-up; it
+        slots in behind this same view interface.
+        """
+        safe = jnp.clip(self.table, 0)
+        kg = self.k_pool[safe]            # (n, bpr, block, KV, hd)
+        vg = self.v_pool[safe]
+        n, bpr = self.table.shape
+        kg = kg.reshape((n, bpr * self.block) + kg.shape[3:])
+        vg = vg.reshape((n, bpr * self.block) + vg.shape[3:])
+        return kg[:, :self.max_len], vg[:, :self.max_len]
+
+
+# =========================== cache implementations ==========================
+
+class KVCache:
+    """Protocol: a multi-layer KV cache with explicit block lifecycle.
+
+    Pure-functional: every mutator returns a new cache. ``rows`` is a
+    vector of row (slot) ids, ``mask`` selects which of them the call
+    applies to — the scheduler passes its admission permutation
+    unchanged. Implementations: ``DenseKVCache`` (``alloc``/``free``
+    are no-ops), ``PagedKVCache`` (block tables + free-list).
+    """
+
+    # ---- per-layer scan machinery (the hot path) ----
+    @property
+    def layers(self) -> Any:
+        """Pytree to scan over; leaves carry the layer dim in front."""
+        raise NotImplementedError
+
+    def view(self, leaves, rows=None, mask=None):
+        """Bind one layer's scanned leaves (plus shared state) into a
+        view with ``write_prompt`` / ``append`` / ``gather``."""
+        raise NotImplementedError
+
+    def with_layers(self, stacked) -> "KVCache":
+        """Rebuild from the scan's stacked per-layer outputs."""
+        raise NotImplementedError
+
+    def view_at(self, layer: int, rows=None, mask=None):
+        """View of a statically-indexed layer (hybrid's shared app)."""
+        return self.view(jax.tree.map(lambda a: a[layer], self.layers),
+                         rows=rows, mask=mask)
+
+    def set_at(self, layer: int, view) -> "KVCache":
+        return self.with_layers(jax.tree.map(
+            lambda full, n: full.at[layer].set(n), self.layers,
+            view.leaves))
+
+    # ---- issue-protocol conveniences over the view machinery ----
+    def append(self, layer: int, rows, cur_len, k, v) -> "KVCache":
+        """Append one token's K/V for ``rows`` at ``cur_len - 1``."""
+        return self.set_at(layer,
+                           self.view_at(layer, rows=rows).append(k, v,
+                                                                 cur_len))
+
+    def gather(self, layer: int, rows=None):
+        """Dense (rows, max_len, KV, hd) K/V of one layer."""
+        k, v = self.view_at(layer).gather()
+        if rows is None:
+            return k, v
+        return k[rows], v[rows]
+
+    # ---- lifecycle ----
+    def alloc(self, rows, budget, mask=None) -> "KVCache":
+        """Reserve capacity for ``budget[i]`` tokens on row ``rows[i]``
+        (masked rows only). Dense: no-op (capacity is preallocated)."""
+        return self
+
+    def free(self, rows=None, mask=None) -> "KVCache":
+        """Release rows' capacity back to the pool. Dense: no-op."""
+        return self
+
+    # ---- placement ----
+    def shardings(self, rules, mesh=None, row_axis: str = sh.BATCH):
+        """Matching-structure pytree of ``NamedSharding``s."""
+        raise NotImplementedError
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DenseKVCache(KVCache):
+    """Reference implementation: ``(L, n_rows, max_len, KV, hd)``."""
+
+    k: jax.Array
+    v: jax.Array
+
+    def tree_flatten(self):
+        return (self.k, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def create(cls, n_layers: int, n_rows: int, max_len: int, kv_heads: int,
+               head_dim: int, dtype, abstract: bool = False
+               ) -> "DenseKVCache":
+        shape = (n_layers, n_rows, max_len, kv_heads, head_dim)
+        if abstract:
+            e = jax.ShapeDtypeStruct(shape, dtype)
+            return cls(k=e, v=e)
+        z = jnp.zeros(shape, dtype)
+        return cls(k=z, v=z)
+
+    @property
+    def n_rows(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def layers(self):
+        return {"k": self.k, "v": self.v}
+
+    def view(self, leaves, rows=None, mask=None) -> DenseView:
+        return DenseView(leaves["k"], leaves["v"], rows=rows, mask=mask)
+
+    def with_layers(self, stacked) -> "DenseKVCache":
+        return DenseKVCache(k=stacked["k"], v=stacked["v"])
+
+    def shardings(self, rules, mesh=None, row_axis: str = sh.BATCH):
+        spec = (sh.LAYERS, row_axis, None, sh.CACHE_KV, sh.CACHE_HD)
+        s = rules.sharding(spec, mesh, dims=tuple(self.k.shape))
+        return DenseKVCache(k=s, v=s)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVCache(KVCache):
+    """Block-table cache: shared pool + per-row tables + free-list.
+
+    ``owner[b]`` is the row id holding physical block ``b`` (``-1`` =
+    free) — the free-list as a flat vector, so ``alloc``/``free`` are
+    in-graph scatters and the whole lifecycle stays inside jit /
+    ``while_loop`` bodies.
+    """
+
+    k_pool: jax.Array        # (L, n_blocks, block, KV, hd)
+    v_pool: jax.Array
+    table: jax.Array         # (n_rows, blocks_per_row) int32, -1 = unalloc
+    owner: jax.Array         # (n_blocks,) int32, -1 = free
+    max_len: int = 0         # logical per-row width (static)
+
+    def tree_flatten(self):
+        return (self.k_pool, self.v_pool, self.table, self.owner), \
+            (self.max_len,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, max_len=aux[0])
+
+    @classmethod
+    def create(cls, n_layers: int, n_rows: int, max_len: int, kv_heads: int,
+               head_dim: int, dtype, *, block: int = 16,
+               n_blocks: Optional[int] = None, abstract: bool = False
+               ) -> "PagedKVCache":
+        """``n_blocks`` defaults to dense-equivalent capacity
+        (``n_rows * ceil(max_len / block)``); serving pools pass less —
+        that under-provisioning is the whole point."""
+        bpr = math.ceil(max_len / block)
+        nb = n_rows * bpr if n_blocks is None else int(n_blocks)
+        pshape = (n_layers, nb, block, kv_heads, head_dim)
+        if abstract:
+            e = jax.ShapeDtypeStruct(pshape, dtype)
+            return cls(k_pool=e, v_pool=e,
+                       table=jax.ShapeDtypeStruct((n_rows, bpr), jnp.int32),
+                       owner=jax.ShapeDtypeStruct((nb,), jnp.int32),
+                       max_len=max_len)
+        return cls(k_pool=jnp.zeros(pshape, dtype),
+                   v_pool=jnp.zeros(pshape, dtype),
+                   table=jnp.full((n_rows, bpr), -1, jnp.int32),
+                   owner=jnp.full((nb,), -1, jnp.int32),
+                   max_len=max_len)
+
+    @property
+    def n_rows(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def block(self) -> int:
+        return self.k_pool.shape[2]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.k_pool.shape[1]
+
+    @property
+    def blocks_per_row(self) -> int:
+        return self.table.shape[1]
+
+    @property
+    def free_count(self) -> jax.Array:
+        return jnp.sum(self.owner < 0).astype(jnp.int32)
+
+    @property
+    def layers(self):
+        return {"k": self.k_pool, "v": self.v_pool}
+
+    def view(self, leaves, rows=None, mask=None) -> PagedView:
+        return PagedView(leaves["k"], leaves["v"], self.table,
+                         self.max_len, rows=rows, mask=mask)
+
+    def with_layers(self, stacked) -> "PagedKVCache":
+        return dataclasses.replace(self, k_pool=stacked["k"],
+                                   v_pool=stacked["v"])
+
+    # ---- lifecycle (pure array ops; run inside jit / while bodies) ----
+
+    def alloc(self, rows, budget, mask=None) -> "PagedKVCache":
+        """Assign ``ceil(budget / block)`` free blocks to each masked
+        row. Rows must be free (``free`` first — admission does). The
+        caller is responsible for capacity: requests whose blocks don't
+        fit must not be admitted (the scheduler's host mirror enforces
+        this); on overflow the table records ``-1`` (writes drop,
+        gathers read block 0 garbage) rather than corrupting live rows.
+        """
+        rows = jnp.asarray(rows, jnp.int32)
+        n = rows.shape[0]
+        mask = jnp.ones((n,), bool) if mask is None else mask
+        need = blocks_needed(jnp.asarray(budget, jnp.int32), self.block)
+        need = jnp.where(mask, need, 0)
+        # Free block ids in index order, free-first (stable).
+        is_free = self.owner < 0
+        free_ids = jnp.argsort(jnp.where(is_free, 0, 1),
+                               stable=True).astype(jnp.int32)
+        n_free = jnp.sum(is_free).astype(jnp.int32)
+        starts = jnp.cumsum(need) - need                  # exclusive scan
+        j = jnp.arange(self.blocks_per_row, dtype=jnp.int32)[None, :]
+        want = starts[:, None] + j                        # (n, bpr)
+        valid = mask[:, None] & (j < need[:, None]) & (want < n_free)
+        phys = free_ids[jnp.clip(want, 0, self.n_blocks - 1)]
+        new_rows = jnp.where(valid, phys, -1)
+        table = self.table.at[rows].set(
+            jnp.where(mask[:, None], new_rows, self.table[rows]))
+        owner = self.owner.at[
+            jnp.where(valid, phys, self.n_blocks).reshape(-1)].set(
+            jnp.broadcast_to(rows[:, None], valid.shape).reshape(-1),
+            mode="drop")
+        return dataclasses.replace(self, table=table, owner=owner)
+
+    def free(self, rows=None, mask=None) -> "PagedKVCache":
+        """Return masked rows' blocks to the free-list (in-graph: the
+        scheduler calls this at retirement, inside the decode loop)."""
+        n = self.n_rows
+        rows = _bcast_rows(rows, n)
+        mask = jnp.ones((rows.shape[0],), bool) if mask is None else mask
+        row_freed = jnp.zeros((n,), bool).at[rows].set(mask, mode="drop")
+        freed = (self.owner >= 0) & row_freed[jnp.clip(self.owner, 0)]
+        owner = jnp.where(freed, -1, self.owner)
+        table = jnp.where(row_freed[:, None], -1, self.table)
+        return dataclasses.replace(self, table=table, owner=owner)
+
+    def shardings(self, rules, mesh=None, row_axis: str = sh.BATCH):
+        pool = rules.sharding(
+            (sh.LAYERS, sh.BLOCK, None, sh.CACHE_KV, sh.CACHE_HD), mesh,
+            dims=tuple(self.k_pool.shape))
+        return PagedKVCache(
+            k_pool=pool, v_pool=pool,
+            table=rules.sharding((row_axis, None), mesh,
+                                 dims=tuple(self.table.shape)),
+            owner=rules.sharding((sh.BLOCK,), mesh,
+                                 dims=tuple(self.owner.shape)),
+            max_len=self.max_len)
+
+
+def make_kv_cache(cfg, n_layers: int, n_rows: int, max_len: int, *,
+                  impl: str = "dense", block: int = 16,
+                  n_blocks: Optional[int] = None,
+                  abstract: bool = False) -> KVCache:
+    """Build a self-attention KV cache for ``cfg``'s head geometry."""
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.dtype("compute")
+    if impl == "dense":
+        return DenseKVCache.create(n_layers, n_rows, max_len, KV, hd, dt,
+                                   abstract=abstract)
+    if impl == "paged":
+        return PagedKVCache.create(n_layers, n_rows, max_len, KV, hd, dt,
+                                   block=block, n_blocks=n_blocks,
+                                   abstract=abstract)
+    raise ValueError(f"unknown kv cache impl {impl!r}")

@@ -3,16 +3,19 @@
 The paper's thesis applied to serving: decisions that depend on data —
 a sequence hitting EOS, a slot running out of budget — are made
 **inside the runtime**, not by returning to the client. The engine owns
-a fixed pool of ``n_slots`` decode slots. Each slot is one column of a
-shared KV/SSM cache (batch axis of every cache leaf) plus per-slot
-registers (``cur_len``, ``n_emitted``, ``budget``, ``active``,
-``done``, ``request_id``, PRNG key). Three layers:
+a fixed pool of ``n_slots`` decode slots. Each slot is one row of a
+shared KV/SSM cache plus per-slot registers (``cur_len``,
+``n_emitted``, ``budget``, ``active``, ``done``, ``request_id``, PRNG
+key). Three layers:
 
 1. **In-graph step function** (``_step``): one ``core.while_loop``
    whose body decodes *all* slots one token (vector ``cur_len`` — every
    slot sits at a different depth), emits into per-slot output rows,
    and retires slots **data-dependently** (EOS or budget exhausted →
-   ``active=False, done=True``). The loop predicate is
+   ``active=False, done=True``). Retirement also calls
+   ``KVCache.free`` *in-graph*: with the paged cache the slot's blocks
+   return to the free-list inside the loop body, so they are reusable
+   by the very next admission. The loop predicate is
    ``any(active) & (idle_slots < want)`` where the host passes
    ``want = min(admit_threshold, len(queue))`` (or ``n_slots + 1``
    with an empty queue, reducing the predicate to ``any(active)`` so
@@ -21,34 +24,55 @@ registers (``cur_len``, ``n_emitted``, ``budget``, ``active``,
    freed for a scheduling decision to be worth making.
 
 2. **Batched prefill-into-slot** (``_admit``): all queued prompts with
-   a free slot are prefilled together as one ``n_slots``-wide batch and
-   spliced into the pool with one gather+scatter along the cache batch
-   axis (axis 1 of every leaf — an ``engine.make_cache`` invariant).
-   The splice uses a *permutation* of slot indices — admitted requests
-   land in free slots, every other slot rewrites its own column — so
-   admission never moves or re-pads running sequences, and one
-   admission call costs one prefill regardless of how many requests it
-   admits.
+   a free slot are prefilled together as one ``n_slots``-wide batch.
+   Admission first calls ``KVCache.free`` + ``KVCache.alloc`` for the
+   filled rows (no-ops for the dense cache; block-table assignment for
+   the paged one — sized by each request's OWN ``max_new``, which is
+   why the paged pool is bounded by tokens in flight rather than
+   ``n_slots × max_len``), then ``engine.prefill`` writes attention
+   K/V straight into the pool rows while SSM / audio-cross state is
+   spliced along its batch axis. The row mapping is a *permutation* of
+   slot indices — admitted requests land in free slots, every other
+   slot rewrites its own values — so admission never moves or re-pads
+   running sequences, and one admission call costs one prefill
+   regardless of how many requests it admits.
+
+   **Bucketed prefill** (pure-attention families — dense/vlm/audio):
+   variable prompt lengths are right-padded to the next power-of-two
+   bucket (capped at ``prompt_len``), so mixed prompt traffic reuses
+   at most ``log2(prompt_len)+1`` compiled prefill shapes instead of
+   one per length. Right padding is exact there: causal attention
+   means real tokens never see the pad lanes, the first sampled token
+   is read from each row's own last real position, and the pad K/V
+   beyond a row's true length is overwritten by decode before
+   ``cur_len`` ever exposes it. SSM/hybrid prefills keep updating
+   their recurrent state through a pad tail and MoE capacity routing
+   lets pads displace real tokens, so those families require
+   exact-length prompts (``submit`` rejects anything else).
 
 3. **Host driver** (``DecodeScheduler``): keeps a FIFO queue, admits
    between device segments, harvests finished requests. Admission
    policy is greedy FIFO: every free slot is filled before the next
-   device segment. Host-side busy mirrors avoid device round-trips on
-   the scheduling path.
+   device segment — for the paged cache, only while the request's
+   blocks fit the free-list (head-of-line blocking keeps FIFO order;
+   the host mirrors the free-block count so the gate never reads the
+   device). Host-side busy mirrors avoid device round-trips on the
+   scheduling path.
 
 Per-request greedy outputs are **bit-identical** to the
-batch-synchronous ``engine.generate_batch_sync`` path: decode math is
-row-independent, so a sequence's tokens never depend on pool contents
-(equivalence-tested in ``tests/serve/test_scheduler.py``). Exception:
-MoE decode regroups the pool into one routing group
-(``models.moe.moe_mlp``), whose capacity couples rows — that coupling
-already exists inside a batch-synchronous batch, so it is a property
-of the family, not of this scheduler.
+batch-synchronous ``engine.generate_batch_sync`` path — and identical
+between ``kv="dense"`` and ``kv="paged"`` (the paged gather
+reconstructs the dense K/V layout lane-for-lane; see
+``repro.serve.kv_cache``). Exception: MoE decode regroups the pool
+into one routing group (``models.moe.moe_mlp``), whose capacity
+couples rows — that coupling already exists inside a batch-synchronous
+batch, so it is a property of the family, not of this scheduler.
 
 Sharding: the slot pool is just a batch — ``pool_shardings`` maps the
-slot axis onto the data mesh axes via the ``SLOT`` logical axis
-(``repro.dist.sharding``), so an 8-way pool runs 1-slot-per-data-shard
-with the same rules table the training batch uses.
+slot axis onto the data mesh axes via the ``SLOT`` logical axis and
+the paged block pool via ``BLOCK`` (``repro.dist.sharding``), so an
+8-way pool runs 1-slot-per-data-shard with the same rules table the
+training batch uses.
 """
 
 from __future__ import annotations
@@ -62,7 +86,7 @@ import numpy as np
 
 from .. import core
 from ..dist import sharding as sh
-from . import engine, sampling as sampling_lib
+from . import engine, kv_cache as kvc, sampling as sampling_lib
 
 
 # =========================== pool state =====================================
@@ -73,11 +97,11 @@ class SlotPool:
     """Device-resident scheduler state; all leaves are arrays.
 
     Slot lifecycle: FREE (``~active & ~done``) → RUNNING (``active``,
-    via ``_admit``) → DONE (``done``, retired in-graph on EOS/budget) →
-    FREE (host harvest clears ``done``).
+    via ``_admit``) → DONE (``done``, retired in-graph on EOS/budget,
+    cache rows freed in-graph) → FREE (host harvest clears ``done``).
     """
 
-    cache: Any               # engine.make_cache(cfg, n_slots, max_len)
+    cache: Any               # engine.make_cache(cfg, n_slots, max_len, ...)
     next_token: jax.Array    # (n,) int32 — token to feed the next step
     cur_len: jax.Array       # (n,) int32 — valid cache positions + 1
     n_emitted: jax.Array     # (n,) int32 — tokens emitted so far
@@ -113,7 +137,7 @@ class FinishedRequest:
 @dataclasses.dataclass
 class _Queued:
     request_id: int
-    prompt: Any              # (1, prompt_len) int32
+    prompt: Any              # (1, L) int32, 1 <= L <= prompt_len
     max_new: int
     key: Any                 # (2,) uint32 or None (derive from rid)
     prefix_embeds: Any = None
@@ -123,21 +147,21 @@ class _Queued:
 # =========================== shardings ======================================
 
 def pool_shardings(cfg, n_slots: int, max_len: int, max_new_cap: int,
-                   rules, mesh=None):
+                   rules, mesh=None, *, kv: str = "dense",
+                   kv_block: int = 16, kv_blocks: Optional[int] = None):
     """NamedShardings for a ``SlotPool`` under ``rules``.
 
-    The cache batch axis and every per-slot register shard over the
-    ``SLOT`` logical axis (→ the data mesh axes); non-dividing slot
-    counts fall back to replicated via the dims-aware spec.
+    Per-slot registers and dense cache rows shard over the ``SLOT``
+    logical axis (→ the data mesh axes); a paged cache's block pool
+    shards over ``BLOCK`` instead (``KVCache.shardings``).
+    Non-dividing counts fall back to replicated via the dims-aware
+    spec.
     """
-    axes = engine.make_cache(cfg, 0, 0, mode="axes")
-    slot_axes = jax.tree.map(
-        lambda spec: tuple(sh.SLOT if a == sh.BATCH else a for a in spec),
-        axes, is_leaf=lambda x: isinstance(x, tuple))
-    shapes = engine.make_cache(cfg, n_slots, max_len, mode="abstract")
-    cache_sh = jax.tree.map(
-        lambda spec, leaf: rules.sharding(spec, mesh, dims=leaf.shape),
-        slot_axes, shapes, is_leaf=lambda x: isinstance(x, tuple))
+    abs_cache = engine.make_cache(cfg, n_slots, max_len, mode="abstract",
+                                  kv_impl=kv, kv_block=kv_block,
+                                  kv_blocks=kv_blocks)
+    cache_sh = engine.cache_shardings(cfg, rules, mesh, cache=abs_cache,
+                                      row_axis=sh.SLOT)
     vec = rules.sharding((sh.SLOT,), mesh, dims=(n_slots,))
     rep = rules.sharding((), mesh)
     return SlotPool(
@@ -156,9 +180,14 @@ class DecodeScheduler:
 
     Args:
       params, cfg: model.
-      n_slots: decode slots (cache batch dim).
-      prompt_len: fixed prompt length; every submitted prompt must be
-        exactly this long (one prefill compilation).
+      n_slots: decode slots (cache row count).
+      prompt_len: MAXIMUM prompt length; for pure-attention families
+        (dense/vlm/audio) submitted prompts may be any length in
+        ``[1, prompt_len]`` and are right-padded to power-of-two
+        buckets at admission (≤ log2(prompt_len)+1 compiled prefill
+        shapes). SSM/hybrid/MoE prompts must be exactly this long
+        (right padding is not exact for recurrent state / expert
+        capacity).
       max_new_cap: per-slot output buffer capacity; per-request
         ``max_new`` must not exceed it. ``max_len`` is
         ``prompt_len + prefix_len + max_new_cap + 1`` — identical to
@@ -171,6 +200,15 @@ class DecodeScheduler:
       seed: base PRNG seed; request r's key is
         ``fold_in(PRNGKey(seed), r)`` (derived in-graph at admission)
         unless ``submit`` is given an explicit key.
+      admit_threshold: free slots worth pausing a segment for.
+      kv: self-attention cache layout, "dense" | "paged".
+      kv_block: paged block size (tokens per block).
+      kv_blocks: paged pool capacity in blocks. ``None`` = dense-
+        equivalent (``n_slots * ceil(max_len / kv_block)``); serving
+        pools pass less and admit MORE slots at equal cache memory,
+        because each request only holds
+        ``ceil((true_prompt + prefix + max_new + 1) / kv_block)``
+        blocks instead of a full ``max_len`` column.
     """
 
     def __init__(self, params, cfg, *, n_slots: int, prompt_len: int,
@@ -178,11 +216,23 @@ class DecodeScheduler:
                  sampling: sampling_lib.SamplingParams =
                  sampling_lib.SamplingParams(),
                  rules=None, mesh=None, prefix_len: int = 0, seed: int = 0,
-                 admit_threshold: int = 1):
+                 admit_threshold: int = 1, kv: str = "dense",
+                 kv_block: int = 16, kv_blocks: Optional[int] = None):
         if n_slots < 1 or max_new_cap < 1:
             raise ValueError("need n_slots >= 1 and max_new_cap >= 1")
         if not 1 <= admit_threshold <= n_slots:
             raise ValueError("admit_threshold must be in [1, n_slots]")
+        if kv not in ("dense", "paged"):
+            raise ValueError(f"kv must be 'dense' or 'paged'; got {kv!r}")
+        if prefix_len and (cfg.family != "vlm"
+                           or prefix_len != cfg.n_patches):
+            # The in-graph admission derives the patch prefix from
+            # cfg.n_patches; a diverging prefix_len would let the host
+            # block-accounting and the device alloc disagree.
+            raise ValueError(
+                f"prefix_len must be 0, or cfg.n_patches "
+                f"({getattr(cfg, 'n_patches', 'n/a')}) on a vlm config; "
+                f"got {prefix_len} for family {cfg.family!r}")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -196,13 +246,29 @@ class DecodeScheduler:
         self.prefix_len = prefix_len
         self.admit_threshold = admit_threshold
         self.max_len = prompt_len + prefix_len + max_new_cap + 1
+        self.kv = kv
+        self.kv_block = kv_block
+        self.kv_blocks = (n_slots * kvc.blocks_needed(self.max_len,
+                                                      kv_block)
+                          if kv_blocks is None else int(kv_blocks))
+        self._kv_key = engine.kv_key(cfg)
+        # Right padding is EXACT only for pure-attention prefills
+        # (causal masking keeps real tokens blind to pad lanes). An SSM
+        # recurrence keeps updating its conv/h state through the pad
+        # tail, and MoE capacity-limited routing lets pad tokens
+        # displace real ones from expert slots — both would silently
+        # break the bit-identical guarantee, so those families require
+        # exact-length prompts (one prefill shape, as before).
+        self._bucketed = cfg.family in ("dense", "vlm", "audio")
         self._base_key = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self.queue: List[_Queued] = []
-        # host mirrors of slot occupancy (kept in lockstep with the
-        # device flags so the scheduling path never blocks on a
-        # device→host read)
+        # host mirrors of slot occupancy and (paged) free blocks, kept
+        # in lockstep with the device flags so the scheduling path
+        # never blocks on a device→host read
         self._busy = np.zeros(n_slots, bool)
+        self._slot_blocks = np.zeros(n_slots, np.int64)
+        self._free_blocks = self.kv_blocks
         # driver stats (busy_slot_steps lives in-graph: pool.slot_steps)
         self.total_steps = 0          # decode iterations across segments
         self.tokens_emitted = 0
@@ -216,7 +282,9 @@ class DecodeScheduler:
     def _init_pool(self) -> SlotPool:
         n, cap = self.n_slots, self.max_new_cap
         pool = SlotPool(
-            cache=engine.make_cache(self.cfg, n, self.max_len),
+            cache=engine.make_cache(self.cfg, n, self.max_len,
+                                    kv_impl=self.kv, kv_block=self.kv_block,
+                                    kv_blocks=self.kv_blocks),
             next_token=jnp.zeros((n,), jnp.int32),
             cur_len=jnp.ones((n,), jnp.int32),
             n_emitted=jnp.zeros((n,), jnp.int32),
@@ -231,45 +299,69 @@ class DecodeScheduler:
         if self.rules is not None and self.mesh is not None \
                 and self.mesh.size > 1:
             shd = pool_shardings(self.cfg, n, self.max_len, cap,
-                                 self.rules, self.mesh)
+                                 self.rules, self.mesh, kv=self.kv,
+                                 kv_block=self.kv_block,
+                                 kv_blocks=self.kv_blocks)
             pool = jax.tree.map(jax.device_put, pool, shd)
         return pool
+
+    def cache_bytes(self) -> int:
+        """Device bytes held by the pool's cache (all entries)."""
+        return sum(a.size * a.dtype.itemsize
+                   for a in jax.tree.leaves(self.pool.cache))
 
     # ---------------- in-graph admission (batched prefill) ------------
 
     def _build_admit(self):
         cfg, rules, sp = self.cfg, self.rules, self.sampling
-        max_len, n = self.max_len, self.n_slots
+        n, kv_key = self.n_slots, self._kv_key
         base_key = self._base_key
 
-        def admit(params, pool: SlotPool, prompts, slots, rids, max_news,
-                  keys, derive, mask, prefix_embeds, frames) -> SlotPool:
+        def admit(params, pool: SlotPool, prompts, true_lens, slots, rids,
+                  max_news, keys, derive, mask, prefix_embeds, frames
+                  ) -> SlotPool:
             """Admit up to n requests in one prefill.
 
-            prompts (n, L); slots (n,) a PERMUTATION of range(n) whose
-            masked rows are the free slots being filled; mask (n,) bool;
-            derive (n,) bool — fold the request key from ``rids`` (else
-            use ``keys`` as given). Unmasked rows rewrite their own
-            slot's current values, so the call is exact for any k.
+            prompts (n, Sb) right-padded to the bucket width Sb;
+            true_lens (n,) real prompt lengths; slots (n,) a
+            PERMUTATION of range(n) whose masked rows are the free
+            slots being filled; mask (n,) bool; derive (n,) bool —
+            fold the request key from ``rids`` (else use ``keys`` as
+            given). Unmasked rows are untouched (attention K/V) or
+            rewrite their own slot's current values (spliced parts),
+            so the call is exact for any admitted count.
             """
-            cacheB = engine.make_cache(cfg, n, max_len)
+            prefix = 0
+            if cfg.family == "vlm" and prefix_embeds is not None:
+                prefix = cfg.n_patches
+            cache = pool.cache
+            if kv_key is not None:
+                # Lifecycle first: release whatever the freed slot last
+                # held, then reserve this request's own budget — the
+                # paged pool recycles retired blocks immediately.
+                node = cache[kv_key].free(slots, mask=mask)
+                node = node.alloc(
+                    slots, true_lens + prefix + max_news + 1, mask=mask)
+                cache = {**cache, kv_key: node}
             logits, cacheB = engine.prefill(
-                params, cfg, prompts, cacheB, rules,
-                prefix_embeds=prefix_embeds, frames=frames)
+                params, cfg, prompts, cache, rules,
+                prefix_embeds=prefix_embeds, frames=frames,
+                rows=slots, mask=mask)
             rkeys = jnp.where(
                 derive[:, None],
                 jax.vmap(lambda r: jax.random.fold_in(base_key, r))(rids),
                 keys)
-            # Token at emission index 0 comes from the prefill logits.
+            # Token at emission index 0 comes from each row's LAST REAL
+            # position of the prefill logits (bucketed rows are
+            # right-padded, so [:, -1] would read a pad lane).
+            last = prefix + true_lens - 1
             k0 = sampling_lib.step_keys(rkeys, jnp.zeros((n,), jnp.int32))
-            tok0 = sampling_lib.sample_slots(logits[:, -1], k0, sp)
-            prefix = 0
-            if cfg.family == "vlm" and prefix_embeds is not None:
-                prefix = cfg.n_patches
-            cur0 = prompts.shape[1] + prefix + 1
+            tok0 = sampling_lib.sample_slots(
+                logits[jnp.arange(n), last], k0, sp)
+            cur0 = true_lens + prefix + 1
 
             def splice(full, new):
-                # cache leaves carry the slot dim at axis 1
+                # spliced leaves carry the slot dim at axis 1
                 m = mask.reshape((1, n) + (1,) * (full.ndim - 2))
                 old = jnp.take(full, slots, axis=1)
                 upd = jnp.where(m, new.astype(full.dtype), old)
@@ -280,11 +372,21 @@ class DecodeScheduler:
                 return vec.at[slots].set(
                     jnp.where(m, new.astype(vec.dtype), vec[slots]))
 
+            # Attention KVCache entries were written in-pool by prefill
+            # (rows/mask-aware); SSM and audio-cross state comes back
+            # prompt-batch-wide and splices along its batch axis.
+            new_cache = {}
+            for key in cacheB:
+                if isinstance(cacheB[key], kvc.KVCache):
+                    new_cache[key] = cacheB[key]
+                else:
+                    new_cache[key] = jax.tree.map(splice, pool.cache[key],
+                                                  cacheB[key])
+
             return SlotPool(
-                cache=jax.tree.map(splice, pool.cache, cacheB),
+                cache=new_cache,
                 next_token=sreg(pool.next_token, tok0),
-                cur_len=sreg(pool.cur_len,
-                             jnp.full((n,), cur0, jnp.int32)),
+                cur_len=sreg(pool.cur_len, cur0.astype(jnp.int32)),
                 n_emitted=sreg(pool.n_emitted, jnp.zeros((n,), jnp.int32)),
                 budget=sreg(pool.budget, max_news),
                 active=sreg(pool.active, jnp.ones((n,), bool)),
@@ -301,6 +403,7 @@ class DecodeScheduler:
     def _build_step(self):
         cfg, rules, sp = self.cfg, self.rules, self.sampling
         eos_id, cap, n = self.eos_id, self.max_new_cap, self.n_slots
+        kv_key = self._kv_key
 
         def step(params, pool: SlotPool, want) -> SlotPool:
             """One device segment.
@@ -335,11 +438,19 @@ class DecodeScheduler:
                 finished = emit & ((tok == eos_id)
                                    | (n_emitted >= p.budget))
                 active = emit & ~finished
+                # Slot retirement frees the cache row IN-GRAPH: a paged
+                # slot's blocks return to the free-list here, inside
+                # the decode loop (dense: no-op). The retired row's
+                # subsequent garbage appends route to the drop index,
+                # so recycled blocks are never corrupted.
+                cache = p.cache
+                if kv_key is not None:
+                    cache = {**cache,
+                             kv_key: cache[kv_key].free(mask=finished)}
                 # Decode all slots (inactive rows compute garbage that
-                # is masked; their columns are rewritten wholesale on
-                # the next admission).
+                # is masked; their rows are rewritten at admission).
                 logits, cache = engine.decode_step(
-                    params, cfg, tok[:, None], p.cache, p.cur_len, rules)
+                    params, cfg, tok[:, None], cache, p.cur_len, rules)
                 keys = sampling_lib.step_keys(p.keys, n_emitted)
                 nxt = sampling_lib.sample_slots(logits[:, 0], keys, sp)
                 return SlotPool(
@@ -367,10 +478,11 @@ class DecodeScheduler:
     def warmup(self) -> None:
         """Compile admission + both step variants with no-op calls.
 
-        An all-False admission mask rewrites every slot's own values
-        (identity) and an idle pool makes both while_loop variants
-        exit immediately, so state is unchanged while every trace the
-        serving loop needs is compiled outside the timed path.
+        An all-False admission mask touches no slot state and an idle
+        pool makes both while_loop variants exit immediately, so state
+        is unchanged while every trace the serving loop needs is
+        compiled outside the timed path. (Bucketed prompt widths still
+        compile on first use per bucket.)
         """
         if self._busy.any() or self.queue:
             raise RuntimeError("warmup() must run on an idle scheduler")
@@ -385,9 +497,10 @@ class DecodeScheduler:
                   if self.cfg.family == "audio" else None)
         pool = self._admit_fn(
             self.params, self.pool, np.zeros((n, L), np.int32),
-            np.arange(n, dtype=np.int32), np.full(n, -1, np.int32),
-            np.zeros(n, np.int32), np.zeros((n, 2), np.uint32),
-            np.zeros(n, bool), np.zeros(n, bool), prefix_embeds, frames)
+            np.full(n, L, np.int32), np.arange(n, dtype=np.int32),
+            np.full(n, -1, np.int32), np.zeros(n, np.int32),
+            np.zeros((n, 2), np.uint32), np.zeros(n, bool),
+            np.zeros(n, bool), prefix_embeds, frames)
         pool = self._step_fn(self.params, pool,
                              np.int32(self.n_slots + 1))
         jax.block_until_ready(pool.next_token)
@@ -396,6 +509,20 @@ class DecodeScheduler:
     @property
     def free_slots(self) -> int:
         return int(self.n_slots - self._busy.sum())
+
+    @property
+    def free_blocks(self) -> int:
+        """Host mirror of the paged free-list (pool capacity for dense)."""
+        return int(self._free_blocks)
+
+    def blocks_for(self, true_len: int, max_new: int) -> int:
+        """Blocks a request holds while resident (0 for dense)."""
+        if self.kv != "paged":
+            return 0
+        # Must agree with the device-side alloc in _build_admit, which
+        # reserves `true_len + prefix + max_new + 1` token positions.
+        return int(kvc.blocks_needed(
+            true_len + self.prefix_len + max_new + 1, self.kv_block))
 
     @property
     def active_count(self) -> int:
@@ -408,13 +535,27 @@ class DecodeScheduler:
 
     def submit(self, prompt, *, max_new: int, request_id: Optional[int] =
                None, key=None, prefix_embeds=None, frames=None) -> int:
-        """Queue one request. prompt: (1, prompt_len) int32."""
+        """Queue one request. prompt: (1, L) int32, 1 <= L <= prompt_len."""
         prompt = np.asarray(prompt)
-        if prompt.shape != (1, self.prompt_len):
-            raise ValueError(f"prompt must be (1, {self.prompt_len}); "
-                             f"got {prompt.shape}")
+        if prompt.ndim != 2 or prompt.shape[0] != 1 or \
+                not 1 <= prompt.shape[1] <= self.prompt_len:
+            raise ValueError(f"prompt must be (1, L) with 1 <= L <= "
+                             f"{self.prompt_len}; got {prompt.shape}")
+        if not self._bucketed and prompt.shape[1] != self.prompt_len:
+            raise ValueError(
+                f"family {self.cfg.family!r} requires exact-length "
+                f"prompts (1, {self.prompt_len}): right-padding is not "
+                f"exact for SSM state / MoE routing; got {prompt.shape}")
         if not 1 <= max_new <= self.max_new_cap:
             raise ValueError(f"max_new must be in [1, {self.max_new_cap}]")
+        need = self.blocks_for(prompt.shape[1], max_new)
+        if need > self.kv_blocks:
+            # Reject up front: a request that can NEVER fit the paged
+            # pool would otherwise wedge the FIFO head forever.
+            raise ValueError(
+                f"request needs {need} cache blocks but the paged pool "
+                f"only has kv_blocks={self.kv_blocks}; raise kv_blocks "
+                f"or lower max_new/prompt length")
         # prefix/frames presence must be uniform across the pool: one
         # admission batch shares a single prefill call, so a bare
         # request co-admitted with a prefixed one would silently get a
@@ -452,35 +593,62 @@ class DecodeScheduler:
                                   prefix_embeds, frames))
         return rid
 
+    def _bucket(self, length: int) -> int:
+        """Power-of-two prefill bucket for a prompt length."""
+        if not self._bucketed:
+            return self.prompt_len
+        b = 1
+        while b < length:
+            b <<= 1
+        return min(b, self.prompt_len)
+
     def _admit_queued(self) -> int:
-        """Fill every free slot from the queue in ONE batched prefill.
+        """Fill free slots from the queue in ONE batched prefill.
 
         ``admit_threshold > 1`` coalesces admissions: an admission call
         costs one fixed-size prefill dispatch however many requests it
         carries, so waiting for a couple of free slots trades a little
         occupancy for fewer prefill dispatches (throughput knob for
-        small models / fast steps; keep 1 for latency).
+        small models / fast steps; keep 1 for latency). For the paged
+        cache, a request is only admitted while its blocks fit the
+        free-list (FIFO head-of-line blocking — order is preserved, a
+        huge request waits rather than being overtaken).
         """
-        k = min(len(self.queue), self.free_slots)
+        if not self.queue or self.free_slots == 0:
+            return 0
+        batch: List[_Queued] = []
+        blocks_free = self._free_blocks
+        while self.queue and len(batch) < self.free_slots:
+            q = self.queue[0]
+            need = self.blocks_for(q.prompt.shape[1], q.max_new)
+            if need > blocks_free:
+                break
+            blocks_free -= need
+            batch.append(self.queue.pop(0))
+        k = len(batch)
         if k == 0:
             return 0
-        if k < min(self.admit_threshold, len(self.queue)) \
+        if k < min(self.admit_threshold, k + len(self.queue)) \
                 and self._busy.any():
-            return 0   # coalesce: keep decoding, admit on a later round
-        n, L = self.n_slots, self.prompt_len
-        batch = [self.queue.pop(0) for _ in range(k)]
+            self.queue[:0] = batch   # coalesce: admit on a later round
+            return 0
+        n = self.n_slots
+        L = max(self._bucket(q.prompt.shape[1]) for q in batch)
         free = np.nonzero(~self._busy)[0]
         busy = np.nonzero(self._busy)[0]
         slots = np.concatenate([free, busy]).astype(np.int32)  # permutation
         mask = np.zeros(n, bool)
         mask[:k] = True
         prompts = np.zeros((n, L), np.int32)
+        true_lens = np.full(n, L, np.int32)
         rids = np.full(n, -1, np.int32)
         max_news = np.zeros(n, np.int32)
         keys = np.zeros((n, 2), np.uint32)
         derive = np.zeros(n, bool)
         for i, q in enumerate(batch):
-            prompts[i] = q.prompt[0]
+            tl = q.prompt.shape[1]
+            prompts[i, :tl] = q.prompt[0]
+            true_lens[i] = tl
             rids[i] = q.request_id
             max_news[i] = q.max_new
             if q.key is None:
@@ -503,10 +671,15 @@ class DecodeScheduler:
             for i, q in enumerate(batch):
                 if q.frames is not None:
                     frames[i] = np.asarray(q.frames)[0]
-        self.pool = self._admit_fn(self.params, self.pool, prompts, slots,
-                                   rids, max_news, keys, derive, mask,
-                                   prefix_embeds, frames)
-        self._busy[free[:k]] = True
+        self.pool = self._admit_fn(self.params, self.pool, prompts,
+                                   true_lens, slots, rids, max_news, keys,
+                                   derive, mask, prefix_embeds, frames)
+        for i, q in enumerate(batch):
+            slot = int(free[i])
+            self._busy[slot] = True
+            need = self.blocks_for(q.prompt.shape[1], q.max_new)
+            self._slot_blocks[slot] = need
+            self._free_blocks -= need
         return k
 
     def _harvest(self) -> List[FinishedRequest]:
@@ -526,6 +699,10 @@ class DecodeScheduler:
                 text_length=length - int(hit_eos), hit_eos=hit_eos))
             self.tokens_emitted += length
             self._busy[slot] = False
+            # the device freed these blocks in-graph at retirement; the
+            # host mirror learns at harvest, before the next admission
+            self._free_blocks += int(self._slot_blocks[slot])
+            self._slot_blocks[slot] = 0
         # `done` is cleared in-graph at the next segment's entry (the
         # host has harvested by construction), so no dispatch here.
         # Results are RETURNED, not archived: a long-running server

@@ -5,7 +5,7 @@ k optimizer steps fused into one ``repro.core.while_loop`` invocation so
 workers "make progress on training independently, without synchronizing
 with the coordinator between steps" (the coordinator here being Python).
 
-Fault tolerance (DESIGN.md §8): auto-resume from the latest manifest,
+Fault tolerance (DESIGN.md §9): auto-resume from the latest manifest,
 async checkpointing every N steps, SIGTERM → synchronous save → clean
 exit (preemption), per-step watchdog flags stragglers against an EWMA
 deadline, deterministic data replay from (seed, step, host).

@@ -157,6 +157,55 @@ class TestStageMesh:
             print("STAGE_MESH_OK")
         """)
 
+    def test_heterogeneous_multi_axis_mesh(self):
+        """Regression (ROADMAP follow-up a): the heterogeneous
+        ``pipeline_loop(stage_fns, ...)`` form on a multi-axis
+        (data, stage) mesh. XLA's SPMD partitioner (GSPMD and Shardy)
+        miscompiles a concatenate whose output is sharded along the
+        concatenated dim when the mesh carries additional axes: each
+        non-stage replica contributes a partial term that gets summed,
+        so the stage-pinned rotating buffer came back scaled by the
+        data-axis size (exactly 2x on data=2 — the 'NaNs' at scale).
+        The schedule now rebuilds the buffer via dynamic_update_slice
+        scatter, which partitions correctly; values and grads must
+        match the sequential reference bitwise-close on every mesh
+        shape that used to fail."""
+        run_ndev("""
+            import functools
+            from repro.dist import pipeline
+            from repro.launch.mesh import make_mesh
+
+            KEY = jax.random.PRNGKey(0)
+            for n_stages, shape, axes in [
+                    (4, (2, 4), ("data", "stage")),
+                    (2, (4, 2), ("data", "stage")),
+                    (4, (2, 2, 2), ("pod", "data", "stage"))]:
+                ws = [jax.random.normal(jax.random.fold_in(KEY, k),
+                                        (8, 8)) * 0.4
+                      for k in range(n_stages)]
+                fns = [(lambda w: (lambda x: jnp.tanh(x @ w)))(w)
+                       for w in ws]
+                xs = jax.random.normal(jax.random.fold_in(KEY, 7),
+                                       (6, 4, 8))
+
+                def chain(x):
+                    return functools.reduce(lambda a, f: f(a), fns, x)
+
+                ref = jnp.stack([chain(xs[m]) for m in range(6)])
+                mesh = make_mesh(shape, axes)
+                with mesh:
+                    out = pipeline.pipeline_loop(fns, xs, mesh=mesh)
+                    g = jax.grad(lambda x: jnp.sum(pipeline.pipeline_loop(
+                        fns, x, mesh=mesh) ** 2))(xs)
+                g_ref = jax.grad(lambda x: jnp.sum(jnp.stack(
+                    [chain(x[m]) for m in range(6)]) ** 2))(xs)
+                np.testing.assert_allclose(np.asarray(out),
+                                           np.asarray(ref), atol=1e-6)
+                np.testing.assert_allclose(np.asarray(g),
+                                           np.asarray(g_ref), atol=1e-5)
+            print("HETERO_MULTI_AXIS_OK")
+        """)
+
     def test_train_step_pipeline_accum_on_stage_mesh(self):
         """ROADMAP pipeline+grad-accum composition: under a (data,
         stage) mesh, accum='auto' routes cfg.grad_accum microbatches

@@ -51,8 +51,10 @@ class TestChunkedAttention:
         q = jax.random.normal(KEY, (2, S, H, D))
         k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, S, KV, D))
         v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, S, KV, D))
+        from repro.serve.kv_cache import DenseView
         full = attention_ref(q, k, v, causal=True)
-        dec = attn_lib.decode_attention(q[:, -1:], k, v, cur_len=S)
+        dec = attn_lib.decode_attention(q[:, -1:], DenseView(k, v),
+                                        cur_len=S)
         np.testing.assert_allclose(dec[:, 0], full[:, -1], rtol=2e-3,
                                    atol=2e-3)
 

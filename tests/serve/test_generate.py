@@ -102,6 +102,33 @@ def test_lengths_count_eos_and_text_lengths():
     np.testing.assert_array_equal(np.asarray(res3.text_lengths), [0, 0])
 
 
+@pytest.mark.parametrize("arch", ["zamba2-1.2b", "dbrx-132b",
+                                  "whisper-small", "internvl2-1b"])
+def test_paged_matches_dense_across_families(arch):
+    """The paged KV cache is bit-identical to dense for every family
+    with attention K/V — hybrid (shared-app cache), MoE, audio
+    (encoder-decoder self-attn; cross stays dense), VLM (patch
+    prefix)."""
+    cfg = get_config(arch, smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    B, S = 2, 8
+    prompt = jax.random.randint(KEY, (B, S), 2, cfg.vocab)
+    kwargs = {}
+    if cfg.family == "audio":
+        kwargs["frames"] = jax.random.normal(
+            KEY, (B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        kwargs["prefix_embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    dense = engine.generate_batch_sync(params, cfg, prompt, max_new=6,
+                                       eos_id=1, **kwargs)
+    paged = engine.generate_batch_sync(params, cfg, prompt, max_new=6,
+                                       eos_id=1, kv_impl="paged",
+                                       kv_block=4, **kwargs)
+    np.testing.assert_array_equal(np.asarray(dense.tokens),
+                                  np.asarray(paged.tokens))
+
+
 def test_generate_matches_stepwise_decode():
     cfg = get_config("llama3.2-1b", smoke=True)
     params = model_zoo.init_params(cfg, KEY)

@@ -40,11 +40,13 @@ def _zero_embed(params):
 
 # ------------------- equivalence with batch-synchronous ---------------------
 
+@pytest.mark.parametrize("kv", ["dense", "paged"])
 @pytest.mark.parametrize("arch", ["smollm-135m", "falcon-mamba-7b"])
-def test_greedy_equivalence_with_queueing(arch):
+def test_greedy_equivalence_with_queueing(arch, kv):
     """Per-request greedy tokens are BIT-IDENTICAL to batch-synchronous
     generate, even when the pool is smaller than the request count (so
-    later requests decode next to unrelated mid-stream neighbours)."""
+    later requests decode next to unrelated mid-stream neighbours) —
+    and identical between the dense and paged KV caches."""
     cfg = get_config(arch, smoke=True)
     params = model_zoo.init_params(cfg, KEY)
     B, S, NEW = 3, 8, 10
@@ -53,7 +55,8 @@ def test_greedy_equivalence_with_queueing(arch):
                                       eos_id=1)
 
     sched = sched_lib.DecodeScheduler(params, cfg, n_slots=2, prompt_len=S,
-                                      max_new_cap=NEW, eos_id=1)
+                                      max_new_cap=NEW, eos_id=1, kv=kv,
+                                      kv_block=4)
     for b in range(B):
         sched.submit(prompt[b:b + 1], max_new=NEW)
     finished = sched.run_until_drained()
@@ -63,6 +66,52 @@ def test_greedy_equivalence_with_queueing(arch):
             f.tokens, np.asarray(sync.tokens[f.request_id, :f.length]))
         assert f.length == int(sync.lengths[f.request_id])
         assert f.text_length == int(sync.text_lengths[f.request_id])
+    if kv == "paged":   # every block returned to the free-list
+        assert sched.free_blocks == sched.kv_blocks
+
+
+def test_paged_batch_sync_bit_identical(smollm):
+    """generate_batch_sync parameterized by cache impl: paged greedy
+    decode is bit-identical to the dense reference."""
+    cfg, params = smollm
+    prompt = jax.random.randint(KEY, (3, 8), 2, cfg.vocab)
+    dense = engine.generate_batch_sync(params, cfg, prompt, max_new=8,
+                                       eos_id=1)
+    paged = engine.generate_batch_sync(params, cfg, prompt, max_new=8,
+                                       eos_id=1, kv_impl="paged",
+                                       kv_block=4)
+    np.testing.assert_array_equal(np.asarray(dense.tokens),
+                                  np.asarray(paged.tokens))
+    np.testing.assert_array_equal(np.asarray(dense.lengths),
+                                  np.asarray(paged.lengths))
+
+
+def test_paged_tight_pool_admits_by_blocks(smollm):
+    """A paged pool with FEWER blocks than slots x max_len admits only
+    what fits (FIFO head-of-line), recycles retired blocks, and still
+    completes everything bit-identically."""
+    cfg, params = smollm
+    B, S, NEW = 4, 8, 8
+    prompt = jax.random.randint(KEY, (B, S), 2, cfg.vocab)
+    sync = engine.generate_batch_sync(params, cfg, prompt, max_new=NEW,
+                                      eos_id=1)
+    # max_len = 8 + 8 + 1 = 17 -> 5 blocks/request at block=4; pool of
+    # 10 fits TWO resident requests though there are 4 slots.
+    sched = sched_lib.DecodeScheduler(params, cfg, n_slots=4, prompt_len=S,
+                                      max_new_cap=NEW, eos_id=1,
+                                      kv="paged", kv_block=4, kv_blocks=10)
+    for b in range(B):
+        sched.submit(prompt[b:b + 1], max_new=NEW)
+    sched._admit_queued()
+    assert sched.active_count == 2          # block-gated, not slot-gated
+    assert len(sched.queue) == 2
+    assert sched.free_blocks == 0
+    finished = sched.run_until_drained()
+    assert len(finished) == B
+    for f in finished:
+        np.testing.assert_array_equal(
+            f.tokens, np.asarray(sync.tokens[f.request_id, :f.length]))
+    assert sched.free_blocks == sched.kv_blocks
 
 
 def test_generate_wrapper_matches_batch_sync(smollm):
@@ -148,10 +197,137 @@ def test_submit_validation(smollm):
     cfg, params = smollm
     sched = sched_lib.DecodeScheduler(params, cfg, n_slots=1, prompt_len=8,
                                       max_new_cap=4)
+    sched.submit(np.zeros((1, 7), np.int32), max_new=4)   # short: bucketed
     with pytest.raises(ValueError):
-        sched.submit(np.zeros((1, 7), np.int32), max_new=4)
+        sched.submit(np.zeros((1, 9), np.int32), max_new=4)  # > prompt_len
+    with pytest.raises(ValueError):
+        sched.submit(np.zeros((1, 0), np.int32), max_new=4)  # empty
     with pytest.raises(ValueError):
         sched.submit(np.zeros((1, 8), np.int32), max_new=5)
+    # a paged request that can NEVER fit the pool is rejected at
+    # submit instead of wedging the FIFO head forever
+    paged = sched_lib.DecodeScheduler(params, cfg, n_slots=1, prompt_len=8,
+                                      max_new_cap=6, kv="paged",
+                                      kv_block=4, kv_blocks=3)
+    with pytest.raises(ValueError):
+        paged.submit(np.zeros((1, 8), np.int32), max_new=6)  # needs 4
+    # prefix_len must be 0 (or cfg.n_patches on a vlm config)
+    with pytest.raises(ValueError):
+        sched_lib.DecodeScheduler(params, cfg, n_slots=1, prompt_len=8,
+                                  max_new_cap=4, prefix_len=3)
+
+
+def test_ssm_requires_exact_length_prompts():
+    """Right padding is NOT exact for recurrent state: the scheduler
+    must reject short prompts for SSM families instead of silently
+    decoding from pad-polluted conv/h state."""
+    cfg = get_config("falcon-mamba-7b", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    sched = sched_lib.DecodeScheduler(params, cfg, n_slots=1, prompt_len=8,
+                                      max_new_cap=4)
+    with pytest.raises(ValueError, match="exact-length"):
+        sched.submit(np.zeros((1, 5), np.int32), max_new=4)
+    sched.submit(np.zeros((1, 8), np.int32), max_new=4)  # exact: fine
+
+
+# ------------------- bucketed prefill ---------------------------------------
+
+@pytest.mark.parametrize("kv", ["dense", "paged"])
+def test_bucketed_prefill_variable_lengths(smollm, kv):
+    """Variable prompt lengths are right-padded to pow2 buckets; each
+    request's greedy tokens are bit-identical to a batch-sync run of
+    its own exact-length prompt."""
+    cfg, params = smollm
+    sched = sched_lib.DecodeScheduler(params, cfg, n_slots=2,
+                                      prompt_len=16, max_new_cap=6,
+                                      eos_id=1, kv=kv, kv_block=4)
+    prompts = {}
+    for b, L in enumerate((3, 5, 9, 16, 1)):
+        p = jax.random.randint(jax.random.fold_in(KEY, b), (1, L), 2,
+                               cfg.vocab)
+        prompts[sched.submit(p, max_new=6)] = p
+    finished = sched.run_until_drained()
+    assert len(finished) == len(prompts)
+    for f in finished:
+        ref = engine.generate_batch_sync(params, cfg,
+                                         prompts[f.request_id],
+                                         max_new=6, eos_id=1)
+        np.testing.assert_array_equal(
+            f.tokens, np.asarray(ref.tokens[0, :f.length]))
+
+
+def test_bucketed_prefill_bounds_compilations(smollm):
+    """Admission compiles one prefill per power-of-two bucket actually
+    used — <= log2(prompt_len) + 1 shapes however many distinct prompt
+    lengths arrive."""
+    cfg, params = smollm
+    sched = sched_lib.DecodeScheduler(params, cfg, n_slots=1,
+                                      prompt_len=16, max_new_cap=2,
+                                      eos_id=-1)
+    lengths = [1, 2, 3, 4, 5, 6, 7, 9, 11, 13, 15, 16]
+    for b, L in enumerate(lengths):
+        p = jax.random.randint(jax.random.fold_in(KEY, b), (1, L), 2,
+                               cfg.vocab)
+        sched.submit(p, max_new=2)
+        sched.run_until_drained()    # one admission per length
+    buckets = {sched._bucket(L) for L in lengths}
+    assert buckets == {1, 2, 4, 8, 16}
+    assert sched._admit_fn._cache_size() == len(buckets)
+    assert len(buckets) <= int(np.log2(sched.prompt_len)) + 1
+
+
+# ------------------- drain mode & block recycling ---------------------------
+
+def test_drain_mode_runs_tail_in_one_segment(smollm):
+    """Empty queue => want = n_slots + 1 reduces the predicate to
+    any(active): mixed-budget requests drain in ONE device segment.
+    With expect_arrivals=True the segment pauses as soon as
+    admit_threshold slots free instead."""
+    cfg, params = smollm
+    prompt = jax.random.randint(KEY, (2, 8), 2, cfg.vocab)
+
+    def fresh():
+        s = sched_lib.DecodeScheduler(params, cfg, n_slots=2, prompt_len=8,
+                                      max_new_cap=12, eos_id=-1)
+        s.submit(prompt[0:1], max_new=3)
+        s.submit(prompt[1:2], max_new=12)
+        return s
+
+    # drain mode: both retire inside one step() call
+    s = fresh()
+    fin = s.step()
+    assert sorted(f.length for f in fin) == [3, 12]
+    assert s.total_steps == 12 and s.pending == 0
+
+    # expect_arrivals: the segment returns when the 3-budget slot frees
+    s = fresh()
+    fin = s.step(expect_arrivals=True)
+    assert [f.length for f in fin] == [3]
+    assert s.active_count == 1 and s.total_steps == 3
+
+
+def test_eos_heavy_traffic_recycles_blocks(smollm):
+    """EOS-heavy traffic (every request retires after one token)
+    through a tight paged pool: retirement frees blocks in-graph, the
+    next admission reuses them, the free-list never leaks, and the
+    device owner table agrees with the host mirror."""
+    cfg, params = smollm
+    params0 = _zero_embed(params)          # every request EOSes instantly
+    # pool holds exactly ONE resident request's blocks:
+    # max_len = 8+6+1 = 15 -> 4 blocks at block=4
+    sched = sched_lib.DecodeScheduler(params0, cfg, n_slots=2, prompt_len=8,
+                                      max_new_cap=6, eos_id=0,
+                                      kv="paged", kv_block=4, kv_blocks=4)
+    prompt = jax.random.randint(KEY, (6, 8), 2, cfg.vocab)
+    rids = [sched.submit(prompt[b:b + 1], max_new=6) for b in range(6)]
+    finished = sched.run_until_drained()
+    assert {f.request_id for f in finished} == set(rids)
+    assert all(f.hit_eos and f.length == 1 for f in finished)
+    assert sched.free_blocks == sched.kv_blocks == 4
+    # device free-list agrees: no block still owned
+    cache = sched.pool.cache["attn"]
+    assert (np.asarray(cache.owner) == -1).all()
+    assert (np.asarray(cache.table) == -1).all()
 
 
 # ------------------- sampling ----------------------------------------------
@@ -202,9 +378,9 @@ def test_sampled_tokens_in_top_k(smollm):
 # ------------------- sharded slot pool (SPMD) -------------------------------
 
 def test_sharded_slot_pool_8dev():
-    """The slot pool shards over the data mesh axes (SLOT logical axis)
-    and the scheduler produces the same greedy tokens as the unsharded
-    batch-synchronous reference."""
+    """The slot pool shards over the data mesh axes (dense rows over
+    SLOT, paged block pools over BLOCK) and the scheduler produces the
+    same greedy tokens as the unsharded batch-synchronous reference."""
     run_ndev("""
         from jax.sharding import Mesh
         import numpy as onp
@@ -222,24 +398,30 @@ def test_sharded_slot_pool_8dev():
                                  n_kv_heads=cfg.n_kv_heads,
                                  d_ff=cfg.d_ff, vocab=cfg.padded_vocab)
         assert rules.mesh_axes(sh.SLOT) == "data"
+        assert rules.mesh_axes(sh.BLOCK) == "data"
 
         prompt = jax.random.randint(jax.random.PRNGKey(1), (6, 8), 2,
                                     cfg.vocab)
         sync = engine.generate_batch_sync(params, cfg, prompt, max_new=6,
                                           eos_id=1)
-        with mesh:
-            sched = sched_lib.DecodeScheduler(
-                params, cfg, n_slots=4, prompt_len=8, max_new_cap=6,
-                eos_id=1, rules=rules, mesh=mesh)
-            # pool cache really is sharded over the slot axis
-            kshard = jax.tree.leaves(sched.pool.cache)[0].sharding
-            assert "data" in str(kshard.spec), kshard
-            for b in range(6):
-                sched.submit(prompt[b:b + 1], max_new=6)
-            fin = sched.run_until_drained()
-        assert len(fin) == 6
-        for f in fin:
-            onp.testing.assert_array_equal(
-                f.tokens, onp.asarray(sync.tokens[f.request_id, :f.length]))
-        print("sharded pool OK")
+        for kv in ("dense", "paged"):
+            with mesh:
+                sched = sched_lib.DecodeScheduler(
+                    params, cfg, n_slots=4, prompt_len=8, max_new_cap=6,
+                    eos_id=1, rules=rules, mesh=mesh, kv=kv, kv_block=4)
+                # pool cache really is sharded over slots / blocks
+                node = sched.pool.cache["attn"]
+                lead = (node.k if kv == "dense" else node.k_pool)
+                assert "data" in str(lead.sharding.spec), lead.sharding
+                for b in range(6):
+                    sched.submit(prompt[b:b + 1], max_new=6)
+                fin = sched.run_until_drained()
+            assert len(fin) == 6
+            for f in fin:
+                onp.testing.assert_array_equal(
+                    f.tokens,
+                    onp.asarray(sync.tokens[f.request_id, :f.length]))
+            if kv == "paged":
+                assert sched.free_blocks == sched.kv_blocks
+            print("sharded pool OK", kv)
     """, n_devices=8)

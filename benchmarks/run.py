@@ -8,7 +8,8 @@ import traceback
 def main() -> None:
     from . import (bench_dqn, bench_loop_overhead, bench_loop_scaling,
                    bench_memory_swap, bench_model_parallel,
-                   bench_paged_kv, bench_parallel_iterations, bench_serving,
+                   bench_paged_attention, bench_paged_kv,
+                   bench_parallel_iterations, bench_serving,
                    bench_static_vs_dynamic, roofline_report)
 
     suites = [
@@ -21,6 +22,7 @@ def main() -> None:
         ("S6.1", bench_loop_overhead),
         ("Serving", bench_serving),
         ("PagedKV", bench_paged_kv),
+        ("PagedAttn", bench_paged_attention),
         ("Roofline", roofline_report),
     ]
     print("name,us_per_call,derived")

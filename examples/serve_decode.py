@@ -11,6 +11,7 @@
 """
 
 import argparse
+import dataclasses
 import sys
 import time
 
@@ -95,6 +96,26 @@ def main():
     print(f"[serve] paged KV: identical tokens, "
           f"{paged.free_blocks}/{paged.kv_blocks} blocks back on the "
           f"free-list ({paged.kv_block} tokens/block)")
+
+    # ---- gather-free decode: the Pallas paged-attention kernel ---------
+    # attn_impl="pallas" + a paged pool routes decode through
+    # repro.kernels.paged_attention: K/V are read through the block
+    # table on-device (compiled on TPU, interpret-mode elsewhere) and
+    # the dense (slots, max_len) K/V layout is never materialized
+    # (DESIGN.md §8.1). Tokens are still bit-identical.
+    # (CLI equivalent: ... --kv paged --attn-impl pallas)
+    kcfg = dataclasses.replace(cfg, attn_impl="pallas")
+    kern = sched_lib.DecodeScheduler(
+        params, kcfg, n_slots=max(2, args.batch // 2),
+        prompt_len=args.prompt_len, max_new_cap=args.max_new, eos_id=1,
+        kv="paged", kv_block=8)
+    for b in range(args.batch):
+        kern.submit(prompt[b:b + 1], max_new=budgets[b])
+    kf = {f.request_id: f for f in kern.run_until_drained()}
+    for f in finished:
+        assert kf[f.request_id].tokens.tolist() == f.tokens.tolist()
+    print(f"[serve] paged-attention kernel ({kern.attn_impl}): "
+          f"identical tokens, zero dense K/V intermediates")
 
 
 if __name__ == "__main__":

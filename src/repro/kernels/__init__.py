@@ -1,3 +1,21 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels, one package per compute hot-spot. Each package
+# is the three-file pattern of DESIGN.md §11 — ref.py (pure-jnp
+# oracle) + kernel.py (Pallas, `interpret` knob) + ops.py (jit'd
+# dispatch: compiled on TPU, interpret elsewhere) — with a parity
+# sweep in tests/kernels/test_kernels.py.
+#
+# Packages: flash_attention (full-sequence causal GQA forward),
+# selective_scan (mamba1 scan), lstm_cell (fused gates),
+# paged_attention (gather-free block-table single-token decode).
+
+import jax as _jax
+
+
+def on_tpu() -> bool:
+    """Shared dispatch probe: compiled Pallas on TPU, interpret-mode
+    elsewhere (every ops.py wrapper, and anything reporting which
+    path ran, keys off this one helper)."""
+    try:
+        return _jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False

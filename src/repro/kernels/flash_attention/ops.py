@@ -6,15 +6,9 @@ import functools
 
 import jax
 
+from .. import on_tpu
 from .kernel import flash_attention as _kernel
 from .ref import attention_ref
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:  # pragma: no cover
-        return False
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k"))
@@ -22,7 +16,7 @@ def flash_attention(q, k, v, *, causal: bool = True, blk_q: int = 128,
                     blk_k: int = 128):
     """Dispatch: compiled Pallas on TPU, interpret-mode elsewhere."""
     return _kernel(q, k, v, causal=causal, blk_q=blk_q, blk_k=blk_k,
-                   interpret=not _on_tpu())
+                   interpret=not on_tpu())
 
 
 __all__ = ["flash_attention", "attention_ref"]

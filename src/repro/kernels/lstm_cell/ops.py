@@ -6,21 +6,15 @@ import functools
 
 import jax
 
+from .. import on_tpu
 from .kernel import lstm_cell as _kernel
 from .ref import lstm_cell_ref
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:  # pragma: no cover
-        return False
 
 
 @functools.partial(jax.jit, static_argnames=("blk_b", "blk_h"))
 def lstm_cell(w, b, x, c, h, *, blk_b: int = 128, blk_h: int = 128):
     return _kernel(w, b, x, c, h, blk_b=blk_b, blk_h=blk_h,
-                   interpret=not _on_tpu())
+                   interpret=not on_tpu())
 
 
 __all__ = ["lstm_cell", "lstm_cell_ref"]

@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the paged-attention decode kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .. import on_tpu
+from .kernel import paged_attention as _kernel
+from .ref import paged_attention_ref
+
+
+@jax.jit
+def paged_attention(q, k_pool, v_pool, table, cur_len):
+    """Dispatch: compiled Pallas on TPU, interpret-mode elsewhere."""
+    return _kernel(q, k_pool, v_pool, table, cur_len,
+                   interpret=not on_tpu())
+
+
+__all__ = ["paged_attention", "paged_attention_ref"]

@@ -6,21 +6,15 @@ import functools
 
 import jax
 
+from .. import on_tpu
 from .kernel import selective_scan as _kernel
 from .ref import selective_scan_ref
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:  # pragma: no cover
-        return False
 
 
 @functools.partial(jax.jit, static_argnames=("blk_d",))
 def selective_scan(dt, A, B_, C_, x, h0, *, blk_d: int = 256):
     return _kernel(dt, A, B_, C_, x, h0, blk_d=blk_d,
-                   interpret=not _on_tpu())
+                   interpret=not on_tpu())
 
 
 __all__ = ["selective_scan", "selective_scan_ref"]

@@ -16,10 +16,15 @@ Add ``--kv paged`` to serve from the block-table KV cache
 tokens in flight instead of ``slots x max_len``, so mixed short/long
 traffic fits more resident requests per byte — size the pool with
 ``--kv-block`` / ``--kv-blocks``. Greedy outputs are bit-identical to
-the dense default.
+the dense default. ``--attn-impl pallas`` (with ``--kv paged``) runs
+decode through the gather-free Pallas paged-attention kernel
+(DESIGN.md §8.1); the report line names the path that ACTUALLY ran —
+``pallas-paged:interpret`` on CPU is a correctness fallback, not a
+TPU number.
 """
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -104,11 +109,17 @@ def run_continuous(args, cfg, params, workload):
     return {"wall_s": wall, "busy_s": busy, "tok_s": toks / busy,
             "p50_s": pctl(lat, 50), "p99_s": pctl(lat, 99),
             "occupancy": sched.occupancy, "steps": sched.total_steps,
-            "tokens": toks}
+            "tokens": toks, "attn_impl": sched.attn_impl}
 
 
 def run_batch_sync(args, cfg, params, workload):
-    """Back-to-back batch-synchronous generate at equal slot count."""
+    """Back-to-back batch-synchronous generate at equal slot count.
+
+    Same cache layout and attention path as the continuous run
+    (``--kv`` / ``--attn-impl`` thread through), so the printed ratio
+    isolates the scheduling policy; the per-call pool is sized
+    dense-equivalent (``--kv-blocks`` under-provisioning is a
+    *scheduler* capacity knob and has no batch-sync analogue)."""
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(rng.integers(
         2, cfg.vocab, (len(workload), args.prompt_len)), jnp.int32)
@@ -120,7 +131,8 @@ def run_batch_sync(args, cfg, params, workload):
     def gen_for(max_new):
         if max_new not in gens:
             gens[max_new] = jax.jit(lambda p, t: engine.generate_batch_sync(
-                p, cfg, t, max_new=max_new, eos_id=args.eos_id))
+                p, cfg, t, max_new=max_new, eos_id=args.eos_id,
+                kv_impl=args.kv, kv_block=args.kv_block))
             _ = gens[max_new](params, warm)  # compile at the timed shape
         return gens[max_new]
 
@@ -130,16 +142,19 @@ def run_batch_sync(args, cfg, params, workload):
         gen_for(max(workload[i][1] for i in b))
 
     toks = 0
+    attn_impl = ""
     t0 = time.perf_counter()
     for b in batches:
         cap = max(workload[i][1] for i in b)
         idx = b + [b[-1]] * (args.slots - len(b))    # pad last batch
         res = gen_for(cap)(params, prompts[jnp.asarray(idx)])
         jax.block_until_ready(res.tokens)
+        attn_impl = res.attn_impl
         toks += int(sum(min(int(res.lengths[j]), workload[i][1])
                         for j, i in enumerate(b)))
     wall = time.perf_counter() - t0
-    return {"wall_s": wall, "tok_s": toks / wall, "tokens": toks}
+    return {"wall_s": wall, "tok_s": toks / wall, "tokens": toks,
+            "attn_impl": attn_impl}
 
 
 def main():
@@ -168,16 +183,24 @@ def main():
     ap.add_argument("--kv-blocks", type=int, default=None,
                     help="paged pool capacity in blocks (default: "
                          "dense-equivalent)")
+    ap.add_argument("--attn-impl", choices=("xla", "pallas"), default=None,
+                    help="decode attention path: 'pallas' + --kv paged "
+                         "runs the gather-free paged-attention kernel "
+                         "(compiled on TPU, interpret elsewhere); "
+                         "default keeps the config's setting")
     ap.add_argument("--compare", action="store_true",
                     help="also run the batch-synchronous baseline")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.attn_impl is not None:
+        cfg = dataclasses.replace(cfg, attn_impl=args.attn_impl)
     params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
     workload = build_workload(args, np.random.default_rng(args.seed))
 
     cont = run_continuous(args, cfg, params, workload)
-    print(f"[serve] continuous: {cont['tokens']} tokens, "
+    print(f"[serve] continuous ({cont['attn_impl']}): "
+          f"{cont['tokens']} tokens, "
           f"{cont['wall_s']:.2f}s wall ({cont['busy_s']:.2f}s busy) -> "
           f"{cont['tok_s']:.1f} tok/s | "
           f"latency p50 {cont['p50_s'] * 1e3:.0f}ms "
@@ -186,7 +209,8 @@ def main():
           f"({cont['steps']} device steps)")
     if args.compare:
         sync = run_batch_sync(args, cfg, params, workload)
-        print(f"[serve] batch-sync (offline, no arrival gating): "
+        print(f"[serve] batch-sync ({sync['attn_impl']}; offline, no "
+              f"arrival gating): "
               f"{sync['tokens']} tokens in {sync['wall_s']:.2f}s -> "
               f"{sync['tok_s']:.1f} tok/s")
         # both rates are busy-time rates, so the ratio is arrival-free

@@ -134,7 +134,7 @@ def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
     return out.reshape(B, S_valid, H, D).astype(q.dtype)
 
 
-def decode_attention(q, kv, *, cur_len):
+def decode_attention(q, kv, *, cur_len, attn_impl: str = "xla"):
     """Single-position attention against a cache view.
 
     q: (B, 1, H, D); ``kv`` is a KV-cache layer view
@@ -146,7 +146,23 @@ def decode_attention(q, kv, *, cur_len):
     positions (includes the current token) — a scalar, or a (B,)
     vector of per-row lengths (slot-based continuous batching, where
     each slot is at a different depth into its sequence).
+
+    ``attn_impl="pallas"`` routes a PAGED view (one whose
+    ``paged_state()`` is non-None) to the gather-free Pallas decode
+    kernel (``repro.kernels.paged_attention``): K/V are read through
+    the block table on-device and the dense ``(B, T, KV, D)`` layout
+    is never materialized. Dense views — and the default
+    ``attn_impl="xla"`` — take the gather path below.
     """
+    if attn_impl == "pallas":
+        state = getattr(kv, "paged_state", lambda: None)()
+        if state is not None:
+            from ..kernels.paged_attention.ops import paged_attention
+            k_pool, v_pool, table = state
+            cur = jnp.asarray(cur_len, jnp.int32)
+            if cur.ndim == 0:
+                cur = jnp.full((q.shape[0],), cur, jnp.int32)
+            return paged_attention(q, k_pool, v_pool, table, cur)
     k_cache, v_cache = kv.gather()
     B, _, H, D = q.shape
     T, KV = k_cache.shape[1], k_cache.shape[2]
@@ -161,6 +177,11 @@ def decode_attention(q, kv, *, cur_len):
     mask = jnp.arange(T)[None, None, None, :] < cur
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+    # p stays fp32 through the PV product: single-token decode is
+    # bandwidth-bound on K/V (p is never materialized to memory), so
+    # the bf16 downcast bought nothing and cost ~3 digits — and it is
+    # what kept the Pallas paged kernel (fp32 accumulator) from
+    # agreeing with this path to fp32 precision.
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
     return out.reshape(B, 1, H, D).astype(q.dtype)

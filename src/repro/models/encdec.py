@@ -152,7 +152,8 @@ def _dec_block(lp, x, cfg, rules, enc_out=None, *, mode="full",
         new_self = self_kv.write_prompt(k, v)
     else:  # decode
         new_self = self_kv.append(k, v, cur_len)
-        a = attn_lib.decode_attention(q, new_self, cur_len=cur_len)
+        a = attn_lib.decode_attention(q, new_self, cur_len=cur_len,
+                                      attn_impl=cfg.attn_impl)
     if stp:
         a = sh.constrain(a, rules, (sh.BATCH, sh.ATTN_SEQ, None, None))
     x = x + _proj_out(lp["self_attn"], a, cfg, x)

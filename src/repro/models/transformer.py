@@ -175,7 +175,11 @@ def attn_apply(p, x, cfg, rules, *, positions, mode: str = "full",
         # write through whatever layout it owns (dense column scatter,
         # or paged block-table scatter).
         new_kv = kv_cache.append(k, v, cur_len)
-        out = attn_lib.decode_attention(q, new_kv, cur_len=cur_len)
+        # attn_impl="pallas" + a paged view = the gather-free Pallas
+        # paged-attention kernel; anything else gathers (dense views
+        # gather for free).
+        out = attn_lib.decode_attention(q, new_kv, cur_len=cur_len,
+                                        attn_impl=cfg.attn_impl)
     else:
         raise ValueError(mode)
 

@@ -398,6 +398,26 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
 
 # =========================== in-graph generation ============================
 
+def resolved_attn_impl(cfg: ModelConfig, kv_impl: str) -> str:
+    """Which decode-attention path a (cfg, kv_impl) pair actually runs.
+
+    The Pallas paged-attention kernel engages only when BOTH the
+    config asks for it (``cfg.attn_impl == "pallas"``) and the cache
+    view is paged; off TPU the kernel runs in interpret mode — a
+    correctness path, NOT a fast path — and benchmark readers must be
+    able to tell (a CPU "pallas" number silently read as a TPU number
+    is exactly the confusion this string exists to prevent).
+    Attention-free families (pure SSM) have no KV cache and no
+    attention path at all, whatever the knobs say.
+    """
+    if kv_key(cfg) is None:
+        return "attention-free"
+    if cfg.attn_impl == "pallas" and kv_impl == "paged":
+        from ..kernels import on_tpu
+        return "pallas-paged:" + ("compiled" if on_tpu() else "interpret")
+    return f"xla-gather:{kv_impl}"
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class GenerateResult:
@@ -409,29 +429,38 @@ class GenerateResult:
     of tokens *before* EOS — what callers previously re-derived by
     hand. A row that never hit EOS has
     ``lengths == text_lengths == max_new``.
+
+    ``attn_impl`` reports the decode-attention path that actually ran
+    (``resolved_attn_impl``): "xla-gather:dense", "xla-gather:paged",
+    "pallas-paged:compiled", "pallas-paged:interpret", or
+    "attention-free" (pure-SSM families) — static metadata (pytree
+    aux), so jitted callers carry it for free.
     """
 
     tokens: jax.Array        # (B, max_new)
     lengths: jax.Array       # (B,) emitted tokens, EOS included
     steps: jax.Array         # scalar: loop iterations actually run
     text_lengths: jax.Array  # (B,) tokens before EOS
+    attn_impl: str = ""      # resolved decode-attention path (static)
 
     def tree_flatten(self):
         return (self.tokens, self.lengths, self.steps,
-                self.text_lengths), None
+                self.text_lengths), (self.attn_impl,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, attn_impl=aux[0])
 
 
-def _result_from_tokens(toks, eos_id, steps) -> "GenerateResult":
+def _result_from_tokens(toks, eos_id, steps,
+                        attn_impl: str = "") -> "GenerateResult":
     has_eos = (toks == eos_id).any(axis=1)
     first_eos = jnp.argmax(toks == eos_id, axis=1)
     lengths = jnp.where(has_eos, first_eos + 1, toks.shape[1])
     return GenerateResult(tokens=toks, lengths=lengths,
                           steps=jnp.asarray(steps, jnp.int32),
-                          text_lengths=lengths - has_eos)
+                          text_lengths=lengths - has_eos,
+                          attn_impl=attn_impl)
 
 
 def generate_batch_sync(params, cfg: ModelConfig, prompt: jax.Array, *,
@@ -489,7 +518,8 @@ def generate_batch_sync(params, cfg: ModelConfig, prompt: jax.Array, *,
                            cache, out_ta),
         max_iters=max_new, name="generate")
     toks = ta.stack().T                                  # (B, max_new)
-    return _result_from_tokens(toks, eos_id, i)
+    return _result_from_tokens(toks, eos_id, i,
+                               attn_impl=resolved_attn_impl(cfg, kv_impl))
 
 
 # Wrapper scheduler reuse: jit caches key on closure identity, so a
@@ -566,4 +596,5 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, max_new: int,
     for f in finished:
         toks[f.request_id, :f.length] = f.tokens
     return _result_from_tokens(jnp.asarray(toks), eos_id,
-                               sched.total_steps - steps_before)
+                               sched.total_steps - steps_before,
+                               attn_impl=resolved_attn_impl(cfg, kv_impl))

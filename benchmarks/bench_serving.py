@@ -75,6 +75,9 @@ REPEATS = 4  # best-of-N, interleaved: shared-host wall noise is bursty,
              # so alternate the two paths and take each one's best
 
 
+_LAST = {}   # rows() stashes its measurements so --json doesn't re-run
+
+
 def rows():
     cfg, params, prompts, budgets = _setup()
     c_runs, s_runs = [], []
@@ -83,6 +86,7 @@ def rows():
         s_runs.append(_run_batch_sync(cfg, params, prompts, budgets))
     c_wall, c_toks, occ, c_steps = min(c_runs, key=lambda r: r[0])
     s_wall, s_toks = min(s_runs, key=lambda r: r[0])
+    _LAST["best"] = (c_wall, c_toks, occ, c_steps, s_wall, s_toks)
     assert c_toks == s_toks == sum(budgets), (c_toks, s_toks)
     c_rate, s_rate = c_toks / c_wall, s_toks / s_wall
     s_steps = (N_REQ + SLOTS - 1) // SLOTS * LONG
@@ -94,6 +98,22 @@ def rows():
         ("Serve/speedup", 0.0,
          f"{c_rate / s_rate:.2f}x wall, {s_steps / c_steps:.2f}x steps"),
     ]
+
+
+def json_summary():
+    """Structured record for benchmarks/run.py --json (reuses the
+    best-of-N measurements the preceding rows() call already took)."""
+    if "best" in _LAST:
+        c_wall, c_toks, occ, c_steps, s_wall, s_toks = _LAST["best"]
+    else:
+        cfg, params, prompts, budgets = _setup()
+        c_wall, c_toks, occ, c_steps = _run_continuous(cfg, params,
+                                                       prompts, budgets)
+        s_wall, s_toks = _run_batch_sync(cfg, params, prompts, budgets)
+    return {"continuous": {"tok_s": c_toks / c_wall, "occupancy": occ,
+                           "steps": int(c_steps)},
+            "batch_sync": {"tok_s": s_toks / s_wall},
+            "speedup": (c_toks / c_wall) / (s_toks / s_wall)}
 
 
 if __name__ == "__main__":

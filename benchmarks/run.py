@@ -1,15 +1,27 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+#
+# ``--json`` additionally writes one ``BENCH_<tag>.json`` per suite at
+# the repo root (rows + the suite's ``json_summary()`` dict when it
+# defines one — tok/s, p50/p99 inter-token latency, occupancy for the
+# serving-shaped suites). CI uploads ``BENCH_*.json`` as artifacts so
+# the perf trajectory is recorded per commit. ``--only`` filters
+# suites by tag (comma-separated), e.g. ``--only Serving,ChunkedPrefill``.
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import traceback
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def main() -> None:
-    from . import (bench_dqn, bench_loop_overhead, bench_loop_scaling,
-                   bench_memory_swap, bench_model_parallel,
-                   bench_paged_attention, bench_paged_kv,
-                   bench_parallel_iterations, bench_serving,
+    from . import (bench_chunked_prefill, bench_dqn, bench_loop_overhead,
+                   bench_loop_scaling, bench_memory_swap,
+                   bench_model_parallel, bench_paged_attention,
+                   bench_paged_kv, bench_parallel_iterations, bench_serving,
                    bench_static_vs_dynamic, roofline_report)
 
     suites = [
@@ -23,14 +35,41 @@ def main() -> None:
         ("Serving", bench_serving),
         ("PagedKV", bench_paged_kv),
         ("PagedAttn", bench_paged_attention),
+        ("ChunkedPrefill", bench_chunked_prefill),
         ("Roofline", roofline_report),
     ]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<tag>.json per suite at the "
+                         "repo root (rows + json_summary() when defined)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite tags to run (default all)")
+    args = ap.parse_args()
+    if args.only:
+        keep = {t.strip() for t in args.only.split(",")}
+        unknown = keep - {t for t, _ in suites}
+        if unknown:
+            sys.exit(f"unknown suite tag(s): {sorted(unknown)}")
+        suites = [(t, m) for t, m in suites if t in keep]
+
     print("name,us_per_call,derived")
     failures = 0
     for tag, mod in suites:
         try:
-            for name, us, derived in mod.rows():
+            rows = list(mod.rows())
+            for name, us, derived in rows:
                 print(f"{name},{us:.2f},{derived}")
+            if args.json:
+                doc = {"suite": tag,
+                       "rows": [{"name": n, "us_per_call": u, "derived": d}
+                                for n, u, d in rows]}
+                summary = getattr(mod, "json_summary", None)
+                if summary is not None:
+                    doc["summary"] = summary()
+                path = os.path.join(REPO_ROOT, f"BENCH_{tag}.json")
+                with open(path, "w") as f:
+                    json.dump(doc, f, indent=2)
+                print(f"# wrote {path}", file=sys.stderr)
         except Exception:  # noqa: BLE001 - report and continue
             failures += 1
             print(f"{tag}/FAILED,-1,{traceback.format_exc(limit=1)!r}",

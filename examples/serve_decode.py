@@ -117,6 +117,28 @@ def main():
     print(f"[serve] paged-attention kernel ({kern.attn_impl}): "
           f"identical tokens, zero dense K/V intermediates")
 
+    # ---- chunked prefill: admission as bounded per-step work -----------
+    # prefill="chunked" turns admission into "assign slot + alloc
+    # blocks": the prompt prefills INSIDE the decode loop, at most
+    # chunk_tokens stream positions per iteration interleaved with one
+    # decode token per running slot, so a long prompt never stalls the
+    # pool (DESIGN.md §8.2). With attn_impl="pallas" the chunk
+    # attention streams prior K/V through the block table
+    # (repro.kernels.flash_prefill). Tokens are still bit-identical —
+    # for ANY chunk size, including ones that don't divide the prompt.
+    # (CLI equivalent: ... --prefill chunked --chunk-tokens 5)
+    chunked = sched_lib.DecodeScheduler(
+        params, kcfg, n_slots=max(2, args.batch // 2),
+        prompt_len=args.prompt_len, max_new_cap=args.max_new, eos_id=1,
+        kv="paged", kv_block=8, prefill="chunked", chunk_tokens=5)
+    for b in range(args.batch):
+        chunked.submit(prompt[b:b + 1], max_new=budgets[b])
+    cf = {f.request_id: f for f in chunked.run_until_drained()}
+    for f in finished:
+        assert cf[f.request_id].tokens.tolist() == f.tokens.tolist()
+    print(f"[serve] chunked prefill ({chunked.prefill_impl}): "
+          f"identical tokens, admission never ran a monolithic prefill")
+
 
 if __name__ == "__main__":
     main()

@@ -6,7 +6,9 @@
 #
 # Packages: flash_attention (full-sequence causal GQA forward),
 # selective_scan (mamba1 scan), lstm_cell (fused gates),
-# paged_attention (gather-free block-table single-token decode).
+# paged_attention (gather-free block-table single-token decode),
+# flash_prefill (gather-free block-table causal CHUNK prefill — the
+# chunked-prefill counterpart of paged_attention).
 
 import jax as _jax
 

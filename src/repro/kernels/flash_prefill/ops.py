@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the flash-prefill chunk kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .. import on_tpu
+from .kernel import flash_prefill as _kernel
+from .ref import flash_prefill_ref
+
+
+@jax.jit
+def flash_prefill(q, k_pool, v_pool, table, q_off):
+    """Dispatch: compiled Pallas on TPU, interpret-mode elsewhere."""
+    return _kernel(q, k_pool, v_pool, table, q_off,
+                   interpret=not on_tpu())
+
+
+__all__ = ["flash_prefill", "flash_prefill_ref"]

@@ -7,10 +7,13 @@ layer per decode step — the transient the paged cache was supposed to
 eliminate). The block table and per-row lengths ride in as
 **scalar-prefetch** operands (``pltpu.PrefetchScalarGridSpec``): they
 are resident in SMEM before the body runs, so the BlockSpec index maps
-can chase the indirection — grid step ``(b, h, j)`` DMAs exactly
+can chase the indirection — grid step ``(b, h, g, j)`` DMAs exactly
 physical block ``table[b, j]`` of the shared pool HBM→VMEM, nothing
-else. This is the paper's argument executed at the memory system:
-data-dependent addressing stays on-device, inside the compiled step.
+else (``g`` tiles wide GQA groups in 8-query-row accumulator tiles —
+multi-query grid tiling, so G = 16 MQA decode no longer pads a whole
+``(G, hd)`` fp32 scratch tile). This is the paper's argument executed
+at the memory system: data-dependent addressing stays on-device,
+inside the compiled step.
 
 Layout/behaviour contract (shared with ``ref.py`` and
 ``serve.kv_cache.PagedView``):
@@ -47,8 +50,17 @@ NEG_INF = -1e30
 
 def _pa_kernel(table_ref, cl_ref, q_ref, k_ref, v_ref, o_ref,
                acc_ref, m_ref, l_ref, *, block: int, nb: int, scale: float):
-    """Grid: (B, KV, nb); nb innermost/sequential."""
-    b, j = pl.program_id(0), pl.program_id(2)
+    """Grid: (B, KV, n_gt, nb); nb innermost/sequential.
+
+    Multi-query grid tiling: wide GQA groups (G > 8) are split into
+    ``n_gt`` tiles of ``Gt <= 8`` query rows — each (b, h, g) grid
+    slice owns its own ``(Gt, hd)`` accumulator, so the scratch tile
+    matches the fp32 sublane quantum instead of padding a whole
+    ``(G, hd)`` tile per step. The K/V index map ignores ``g``: within
+    one (b, h) the sequential (g, j) sweep revisits each physical
+    block once per tile with the same index on the j axis.
+    """
+    b, j = pl.program_id(0), pl.program_id(3)
 
     @pl.when(j == 0)
     def _init():
@@ -98,8 +110,14 @@ def paged_attention(q, k_pool, v_pool, table, cur_len, *,
     qg = q.reshape(B, KV, G, hd)
     table = jnp.asarray(table, jnp.int32)
     cur_len = jnp.asarray(cur_len, jnp.int32)
+    # Multi-query grid tiling for wide GQA groups: G > 8 in one tile
+    # just pads the fp32 accumulator past the sublane quantum, so split
+    # the group dim over a grid axis in 8-row tiles (ragged widths keep
+    # the single tile — a 12-row tile beats an 8+pad4 pair).
+    Gt = 8 if (G > 8 and G % 8 == 0) else G
+    n_gt = G // Gt
 
-    def kv_map(b, h, j, table_ref, cl_ref):
+    def kv_map(b, h, g, j, table_ref, cl_ref):
         # Clamp past-the-end blocks to the last valid one: the pipeline
         # sees an unchanged block index and skips the DMA entirely.
         last = jnp.maximum((cl_ref[b] + block - 1) // block - 1, 0)
@@ -108,18 +126,19 @@ def paged_attention(q, k_pool, v_pool, table, cur_len, *,
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, KV, bpr),
+        grid=(B, KV, n_gt, bpr),
         in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, t, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Gt, hd),
+                         lambda b, h, g, j, t, c: (b, h, g, 0)),
             pl.BlockSpec((1, block, 1, hd), kv_map),
             pl.BlockSpec((1, block, 1, hd), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, hd),
-                               lambda b, h, j, t, c: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, Gt, hd),
+                               lambda b, h, g, j, t, c: (b, h, g, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G, hd), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((Gt, hd), jnp.float32),
+            pltpu.VMEM((Gt, 1), jnp.float32),
+            pltpu.VMEM((Gt, 1), jnp.float32),
         ],
     )
     kern = functools.partial(_pa_kernel, block=block, nb=bpr, scale=scale)

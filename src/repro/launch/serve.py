@@ -21,6 +21,15 @@ decode through the gather-free Pallas paged-attention kernel
 (DESIGN.md §8.1); the report line names the path that ACTUALLY ran —
 ``pallas-paged:interpret`` on CPU is a correctness fallback, not a
 TPU number.
+
+``--prefill chunked --chunk-tokens C`` turns admission from a
+stop-the-world prefill into bounded per-step work (DESIGN.md §8.2):
+prompts prefill inside the decode loop, ``C`` stream positions per
+iteration interleaved with one decode token per running slot, so p99
+inter-token latency for running slots stays flat while long prompts
+stream in (``benchmarks/bench_chunked_prefill.py`` measures the
+bound). The report line also names the prefill path that ran
+(``flash-paged:*`` vs ``dense-bucketed``).
 """
 
 import argparse
@@ -70,7 +79,8 @@ def run_continuous(args, cfg, params, workload):
     sched = sched_lib.DecodeScheduler(
         params, cfg, n_slots=args.slots, prompt_len=args.prompt_len,
         max_new_cap=cap, eos_id=args.eos_id, sampling=sp, seed=args.seed,
-        kv=args.kv, kv_block=args.kv_block, kv_blocks=args.kv_blocks)
+        kv=args.kv, kv_block=args.kv_block, kv_blocks=args.kv_blocks,
+        prefill=args.prefill, chunk_tokens=args.chunk_tokens)
     rng = np.random.default_rng(args.seed)
     prompts = {i: rng.integers(2, cfg.vocab,
                                (1, args.prompt_len)).astype(np.int32)
@@ -109,7 +119,8 @@ def run_continuous(args, cfg, params, workload):
     return {"wall_s": wall, "busy_s": busy, "tok_s": toks / busy,
             "p50_s": pctl(lat, 50), "p99_s": pctl(lat, 99),
             "occupancy": sched.occupancy, "steps": sched.total_steps,
-            "tokens": toks, "attn_impl": sched.attn_impl}
+            "tokens": toks, "attn_impl": sched.attn_impl,
+            "prefill_impl": sched.prefill_impl}
 
 
 def run_batch_sync(args, cfg, params, workload):
@@ -188,6 +199,20 @@ def main():
                          "runs the gather-free paged-attention kernel "
                          "(compiled on TPU, interpret elsewhere); "
                          "default keeps the config's setting")
+    ap.add_argument("--prefill", choices=("oneshot", "chunked"),
+                    default="oneshot",
+                    help="admission mode: 'chunked' prefills prompts "
+                         "INSIDE the decode loop (<= --chunk-tokens "
+                         "stream positions per step, interleaved with "
+                         "one decode token per running slot), so a "
+                         "long prompt never stalls running slots; with "
+                         "--attn-impl pallas + --kv paged the chunk "
+                         "attention streams prior K/V through the "
+                         "block table (kernels.flash_prefill)")
+    ap.add_argument("--chunk-tokens", type=int, default=16,
+                    help="chunked-prefill chunk size (smaller = tighter "
+                         "inter-token latency bound, more prefill "
+                         "iterations per prompt)")
     ap.add_argument("--compare", action="store_true",
                     help="also run the batch-synchronous baseline")
     args = ap.parse_args()
@@ -199,7 +224,8 @@ def main():
     workload = build_workload(args, np.random.default_rng(args.seed))
 
     cont = run_continuous(args, cfg, params, workload)
-    print(f"[serve] continuous ({cont['attn_impl']}): "
+    print(f"[serve] continuous (decode {cont['attn_impl']}, "
+          f"prefill {cont['prefill_impl']}): "
           f"{cont['tokens']} tokens, "
           f"{cont['wall_s']:.2f}s wall ({cont['busy_s']:.2f}s busy) -> "
           f"{cont['tok_s']:.1f} tok/s | "

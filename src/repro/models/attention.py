@@ -134,6 +134,83 @@ def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
     return out.reshape(B, S_valid, H, D).astype(q.dtype)
 
 
+def prefill_attention(q, kv, *, q_off, attn_impl: str = "xla",
+                      k_chunk: int = 1024):
+    """Chunked-prefill attention: a C-token chunk against a cache view.
+
+    q: (B, C, H, D); ``kv`` is a KV-cache layer view whose lanes
+    already hold the row's prior K/V **and this chunk's own K/V**
+    (callers ``write_chunk`` first, then attend). q_off: (B,) int32 —
+    absolute stream position of ``q[:, 0]`` per row. Causal: query
+    ``i`` of row ``b`` attends lanes ``[0, q_off[b] + i]``; garbage
+    lanes past a row's true prompt end are only visible to garbage
+    queries the caller discards (the same argument that makes
+    right-padded one-shot prefill exact).
+
+    ``attn_impl="pallas"`` routes a PAGED view to the gather-free
+    flash-prefill kernel (``repro.kernels.flash_prefill``): prior K/V
+    stream through the block table and the dense
+    ``(B, max_len, KV, D)`` layout is never materialized. Dense views
+    — and ``attn_impl="xla"`` — gather and run the SAME blockwise
+    online softmax the one-shot prefill's ``chunked_attention`` runs:
+    identical ``k_chunk`` block boundaries (callers pass
+    ``cfg.attn_k_chunk``) and identical per-block op order, so every
+    real query position's output is bitwise equal to one-shot prefill
+    whatever the chunk size — blocks past a row's visible lanes are
+    exact no-ops of the accumulator (``corr == 1``, ``p == 0``), so
+    the gathered width (``max_len``) vs the one-shot padded width
+    doesn't matter.
+    """
+    if attn_impl == "pallas":
+        state = getattr(kv, "paged_state", lambda: None)()
+        if state is not None:
+            from ..kernels.flash_prefill.ops import flash_prefill
+            k_pool, v_pool, table = state
+            return flash_prefill(q, k_pool, v_pool, table,
+                                 jnp.asarray(q_off, jnp.int32))
+    k_cache, v_cache = kv.gather()
+    B, C, H, D = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = (q * scale).reshape(B, C, KV, G, D)
+    qpos = jnp.asarray(q_off, jnp.int32)[:, None] \
+        + jnp.arange(C, dtype=jnp.int32)[None, :]              # (B, C)
+    kc = min(k_chunk, T)
+    k_cache, _ = _pad_to(k_cache, kc, axis=1)
+    v_cache, _ = _pad_to(v_cache, kc, axis=1)
+    nk = k_cache.shape[1] // kc
+
+    def attend_block(carry, j):
+        # op-for-op the body of chunked_attention.attend_block (fp32
+        # scores, exp/corr accumulators, p cast to the V dtype for the
+        # PV product) — the bitwise contract with one-shot prefill
+        acc, m, l = carry
+        ks = jax.lax.dynamic_slice_in_dim(k_cache, j * kc, kc, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v_cache, j * kc, kc, axis=1)
+        kpos = j * kc + jnp.arange(kc)
+        s = jnp.einsum("bckgd,btkd->bkgct", qg, ks,
+                       preferred_element_type=jnp.float32)
+        mask = kpos[None, None, :] <= qpos[:, :, None]         # (B, C, kc)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgct,btkd->bkgcd", p.astype(vs.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, KV, G, C, D), jnp.float32)
+    m0 = jnp.full((B, KV, G, C), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, C), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(attend_block, (acc0, m0, l0),
+                                  jnp.arange(nk))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, D).astype(q.dtype)
+
+
 def decode_attention(q, kv, *, cur_len, attn_impl: str = "xla"):
     """Single-position attention against a cache view.
 

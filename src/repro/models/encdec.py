@@ -123,7 +123,7 @@ def encode(params, cfg, frames, rules=None):
 
 
 def _dec_block(lp, x, cfg, rules, enc_out=None, *, mode="full",
-               self_kv=None, cross_kv=None, cur_len=None):
+               self_kv=None, cross_kv=None, cur_len=None, chunk_off=None):
     """One decoder block. Returns (x, new_self_kv).
 
     ``self_kv``/``cross_kv`` are KV-cache layer views
@@ -131,6 +131,13 @@ def _dec_block(lp, x, cfg, rules, enc_out=None, *, mode="full",
     touches raw cache arrays, so dense and paged self-attention caches
     both flow through unchanged (the cross cache stays dense: it is
     written once per request at a fixed ``n_frames`` width).
+
+    ``mode="chunk"`` is chunked prefill: ``x`` is a C-token slice of
+    the target stream at per-row offsets ``chunk_off``; self-attention
+    writes the chunk's K/V at those offsets and attends against the
+    cache (prior chunks included), cross-attention reads the bound
+    cross cache — the same lanes the one-shot prefill computes fresh
+    from ``enc_out``, so chunked and one-shot prefill agree.
     """
     cdt = cfg.dtype("compute")
     # -- causal self-attention
@@ -150,6 +157,11 @@ def _dec_block(lp, x, cfg, rules, enc_out=None, *, mode="full",
             q_chunk=(q.shape[1] if stp else cfg.attn_q_chunk),
             k_chunk=cfg.attn_k_chunk)
         new_self = self_kv.write_prompt(k, v)
+    elif mode == "chunk":
+        new_self = self_kv.write_chunk(k, v, chunk_off)
+        a = attn_lib.prefill_attention(q, new_self, q_off=chunk_off,
+                                       attn_impl=cfg.attn_impl,
+                                       k_chunk=cfg.attn_k_chunk)
     else:  # decode
         new_self = self_kv.append(k, v, cur_len)
         a = attn_lib.decode_attention(q, new_self, cur_len=cur_len,
@@ -170,6 +182,14 @@ def _dec_block(lp, x, cfg, rules, enc_out=None, *, mode="full",
             k_chunk=cfg.attn_k_chunk)
         if stp:
             a = sh.constrain(a, rules, (sh.BATCH, sh.ATTN_SEQ, None, None))
+    elif mode == "chunk":
+        # C-wide chunk against the CACHED cross K/V: the same lanes
+        # the one-shot prefill computes fresh from enc_out.
+        qc, _, _ = _qkv(lp["cross_attn"], h, cfg, kv_x=h)  # kv unused
+        ck, cv = cross_kv.gather()
+        a = attn_lib.chunked_attention(qc, ck, cv, causal=False,
+                                       q_chunk=cfg.attn_q_chunk,
+                                       k_chunk=cfg.attn_k_chunk)
     else:
         qc, _, _ = _qkv(lp["cross_attn"], h, cfg, kv_x=h)  # kv unused
         a = attn_lib.decode_attention(qc, cross_kv,

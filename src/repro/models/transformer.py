@@ -113,14 +113,22 @@ def build_params(cfg, b):
 # =========================== attention block ================================
 
 def attn_apply(p, x, cfg, rules, *, positions, mode: str = "full",
-               kv_cache=None, cur_len=None):
-    """mode: full | prefill | decode. Returns (out, new_kv | None).
+               kv_cache=None, cur_len=None, chunk_off=None):
+    """mode: full | prefill | chunk | decode. Returns (out, new_kv | None).
 
-    ``kv_cache`` (prefill/decode modes) is a KV-cache **layer view**
-    (``repro.serve.kv_cache``): an object with ``write_prompt`` /
-    ``append`` / ``gather``, bound by the engine to this layer's slice
-    of a dense or paged cache. The model never sees raw cache arrays —
-    swapping cache layouts never touches this file.
+    ``kv_cache`` (prefill/chunk/decode modes) is a KV-cache **layer
+    view** (``repro.serve.kv_cache``): an object with ``write_prompt``
+    / ``write_chunk`` / ``append`` / ``gather``, bound by the engine to
+    this layer's slice of a dense or paged cache. The model never sees
+    raw cache arrays — swapping cache layouts never touches this file.
+
+    ``mode="chunk"`` is chunked prefill: ``x`` is a C-token slice of
+    the prompt stream whose first token sits at per-row offset
+    ``chunk_off`` (``positions`` must be the matching per-row absolute
+    positions, ``chunk_off[:, None] + arange(C)``). The chunk's K/V is
+    written at those offsets and attention runs against the CACHE
+    (prior chunks included) — through the block table when
+    ``cfg.attn_impl == "pallas"`` and the view is paged.
     """
     cdt = cfg.dtype("compute")
     xc = x.astype(cdt)
@@ -169,6 +177,15 @@ def attn_apply(p, x, cfg, rules, *, positions, mode: str = "full",
             k_chunk=cfg.attn_k_chunk,
             skip_masked_blocks=(cfg.attn_skip_masked_blocks
                                 and not seq_tp))
+    elif mode == "chunk":
+        # Write the chunk's K/V at its per-row offsets FIRST, then
+        # attend against the cache — prior chunks and this one stream
+        # back through whatever layout the view owns (block-table
+        # kernel under attn_impl="pallas" + paged; gather otherwise).
+        new_kv = kv_cache.write_chunk(k, v, chunk_off)
+        out = attn_lib.prefill_attention(q, new_kv, q_off=chunk_off,
+                                         attn_impl=cfg.attn_impl,
+                                         k_chunk=cfg.attn_k_chunk)
     elif mode == "decode":
         # The incoming token's K/V lands at cur_len - 1 (per-row depths
         # under slot-based continuous batching); the view routes the
@@ -193,11 +210,12 @@ def attn_apply(p, x, cfg, rules, *, positions, mode: str = "full",
 
 
 def attn_block(p, x, cfg, rules, *, positions, mode="full", kv_cache=None,
-               cur_len=None):
+               cur_len=None, chunk_off=None):
     """Pre-norm attention + (MoE|MLP) block. Returns (x, new_kv, aux)."""
     h = layers.apply_norm(cfg.norm, x, p, "ln_attn")
     a, new_kv = attn_apply(p["attn"], h, cfg, rules, positions=positions,
-                           mode=mode, kv_cache=kv_cache, cur_len=cur_len)
+                           mode=mode, kv_cache=kv_cache, cur_len=cur_len,
+                           chunk_off=chunk_off)
     a = checkpoint_name(a, "attn_out")
     x = x + a
     h = layers.apply_norm(cfg.norm, x, p, "ln_mlp")

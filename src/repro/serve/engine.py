@@ -164,6 +164,23 @@ def cache_shardings(cfg: ModelConfig, rules, mesh=None, *,
     return out
 
 
+# =========================== logits head ====================================
+
+def _logits_head(params, cfg: ModelConfig, x: jax.Array, rules):
+    """Final norm + (tied / untied) unembed — the shared tail of
+    ``prefill``, ``prefill_chunk``, and ``decode_step``."""
+    cdt = cfg.dtype("compute")
+    if cfg.family == "audio":
+        x = layers.layer_norm(x, params["ln_final"], params["ln_final_b"])
+        w = params["embed"].astype(cdt).T
+    else:
+        x = layers.apply_norm(cfg.norm, x, params, "ln_final")
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["unembed"]).astype(cdt)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(cdt), w)
+    return sh.constrain(logits, rules, (sh.BATCH, None, sh.VOCAB))
+
+
 # =========================== decode steps ===================================
 
 def _decode_positions(cur_len):
@@ -179,7 +196,8 @@ def _decode_positions(cur_len):
     return (cl - 1).astype(jnp.int32)[:, None]
 
 
-def _decode_attn_families(params, cfg, rules, x, cache, cur_len):
+def _decode_attn_families(params, cfg, rules, x, cache, cur_len,
+                          write_mask=None):
     positions = _decode_positions(cur_len)
     node = cache["attn"]
 
@@ -188,7 +206,7 @@ def _decode_attn_families(params, cfg, rules, x, cache, cur_len):
         lp, leaves = xs
         x, new_view, _ = transformer.attn_block(
             lp, x, cfg, rules, positions=positions, mode="decode",
-            kv_cache=node.view(leaves), cur_len=cur_len)
+            kv_cache=node.view(leaves, mask=write_mask), cur_len=cur_len)
         return x, new_view.leaves
 
     x, new_leaves = jax.lax.scan(f, x, (params["layers"], node.layers))
@@ -255,21 +273,33 @@ def _decode_audio(params, cfg, rules, x, cache, cur_len):
 
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Any,
-                cur_len, rules=None) -> Tuple[jax.Array, Any]:
+                cur_len, rules=None, *, write_mask=None
+                ) -> Tuple[jax.Array, Any]:
     """One new token against a cache of `cur_len - 1` previous positions.
 
     token: (B, 1) int32. ``cur_len`` is a scalar (whole batch at the
     same depth — the batch-synchronous loop) or a (B,) vector of
     per-row depths (slot-based continuous batching). Returns
     (logits (B, 1, Vp), new_cache).
+
+    ``write_mask`` (optional, attention families only): (B,) bool —
+    rows whose K/V append should actually land. The chunked-prefill
+    scheduler decodes the whole pool every step while some slots are
+    still mid-prefill; those slots' garbage appends must NOT land at
+    ``cur_len - 1`` (that is prompt position 0 they already wrote), so
+    the decode write is gated where the one-shot scheduler could rely
+    on retired rows being rewritten at admission.
     """
     cdt = cfg.dtype("compute")
     x = jnp.take(params["embed"].astype(cdt), token, axis=0)
     x = sh.constrain(x, rules, (sh.BATCH, None, None))
     fam = cfg.family
+    if write_mask is not None and fam not in ("dense", "moe", "vlm"):
+        raise ValueError(f"write_mask is only supported for attention "
+                         f"families; got family {fam!r}")
     if fam in ("dense", "moe", "vlm"):
         x, new_cache = _decode_attn_families(params, cfg, rules, x, cache,
-                                             cur_len)
+                                             cur_len, write_mask)
     elif fam == "ssm":
         x, new_cache = _decode_ssm(params, cfg, rules, x, cache, cur_len)
     elif fam == "hybrid":
@@ -281,16 +311,7 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Any,
     else:
         raise ValueError(fam)
 
-    if fam == "audio":
-        x = layers.layer_norm(x, params["ln_final"], params["ln_final_b"])
-        w = params["embed"].astype(cdt).T
-    else:
-        x = layers.apply_norm(cfg.norm, x, params, "ln_final")
-        w = (params["embed"].T if cfg.tie_embeddings
-             else params["unembed"]).astype(cdt)
-    logits = jnp.einsum("bsd,dv->bsv", x.astype(cdt), w)
-    logits = sh.constrain(logits, rules, (sh.BATCH, None, sh.VOCAB))
-    return logits, new_cache
+    return _logits_head(params, cfg, x, rules), new_cache
 
 
 # =========================== prefill ========================================
@@ -384,16 +405,95 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
     else:
         raise ValueError(fam)
 
+    return _logits_head(params, cfg, x, rules), new_cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, prompts: jax.Array, cache: Any,
+                  offsets, rules=None, *, chunk: int, mask=None,
+                  prefix_embeds=None) -> Tuple[jax.Array, Any]:
+    """Advance prefill by one ``chunk``-token slice of the prompt stream.
+
+    The chunked-prefill step (DESIGN.md §8.2): instead of priming the
+    cache with one monolithic prompt forward, the scheduler calls this
+    repeatedly — each call embeds STREAM positions
+    ``[offsets[i], offsets[i] + chunk)`` of row ``i`` (the stream is
+    the VLM patch prefix followed by the prompt tokens), writes their
+    K/V into the cache at those offsets (``view.write_chunk``), and
+    attends causally against everything already written — through the
+    block table (``kernels.flash_prefill``) when
+    ``cfg.attn_impl == "pallas"`` and the cache is paged, so no dense
+    ``(rows, max_len, KV, hd)`` intermediate is ever materialized.
+
+    prompts: (n, W) int32 — the FULL per-row token buffers (rows
+    right-padded with anything; lanes past a row's true length are
+    garbage whose K/V is causally invisible to real queries, the same
+    argument that makes right-padded one-shot prefill exact).
+    offsets: (n,) int32 per-row stream offsets; ``mask`` (n,) bool
+    selects the rows actually advancing (unmasked rows compute garbage
+    and write nothing). ``prefix_embeds`` (n, n_patches, d) feeds the
+    VLM patch prefix at stream positions ``[0, n_patches)``.
+
+    Returns (logits (n, chunk, Vp), new_cache): each row's token-0
+    sample reads ``logits[i, plen - 1 - offsets[i]]`` from the call
+    whose window contains its last real position.
+    """
+    cdt = cfg.dtype("compute")
+    fam = cfg.family
+    if fam in ("ssm", "hybrid"):
+        raise ValueError(
+            f"chunked prefill requires an attention-family cache; family "
+            f"{fam!r} folds its recurrent state through a full-prompt "
+            f"forward (use engine.prefill)")
+    n, W = prompts.shape
+    C = int(chunk)
+    offsets = jnp.asarray(offsets, jnp.int32)
+    pos = offsets[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    prefix = 0
+    if fam == "vlm" and prefix_embeds is not None:
+        prefix = cfg.n_patches
+    tid = jnp.take_along_axis(prompts, jnp.clip(pos - prefix, 0, W - 1),
+                              axis=1)
+    x = jnp.take(params["embed"].astype(cdt), tid, axis=0)
+    if prefix:
+        pe = jnp.take_along_axis(
+            prefix_embeds.astype(cdt),
+            jnp.clip(pos, 0, prefix - 1)[..., None], axis=1)
+        x = jnp.where((pos < prefix)[..., None], pe, x)
     if fam == "audio":
-        x = layers.layer_norm(x, params["ln_final"], params["ln_final_b"])
-        w = params["embed"].astype(cdt).T
-    else:
-        x = layers.apply_norm(cfg.norm, x, params, "ln_final")
-        w = (params["embed"].T if cfg.tie_embeddings
-             else params["unembed"]).astype(cdt)
-    logits = jnp.einsum("bsd,dv->bsv", x.astype(cdt), w)
-    logits = sh.constrain(logits, rules, (sh.BATCH, None, sh.VOCAB))
-    return logits, new_cache
+        x = x + layers.sinusoid_at(pos, cfg.d_model, cdt)
+    x = sh.constrain(x, rules, (sh.BATCH, None, None))
+
+    if fam in ("dense", "moe", "vlm"):
+        node = cache["attn"]
+
+        def f(carry, xs):
+            x = carry
+            lp, leaves = xs
+            x, new_view, _ = transformer.attn_block(
+                lp, x, cfg, rules, positions=pos, mode="chunk",
+                kv_cache=node.view(leaves, mask=mask), chunk_off=offsets)
+            return x, new_view.leaves
+        x, new_leaves = jax.lax.scan(f, x, (params["layers"], node.layers))
+        new_cache = {"attn": node.with_layers(new_leaves)}
+    else:   # audio: cross cache must already be primed (written once
+            # per request at its fixed n_frames width)
+        node = cache["self"]
+
+        def f(carry, xs):
+            x = carry
+            lp, leaves, cross = xs
+            x, new_view = encdec._dec_block(
+                lp, x, cfg, rules, mode="chunk",
+                self_kv=node.view(leaves, mask=mask),
+                cross_kv=kvc.DenseView(cross["k"], cross["v"]),
+                chunk_off=offsets)
+            return x, new_view.leaves
+        x, new_leaves = jax.lax.scan(
+            f, x, (params["decoder"], node.layers, cache["cross"]))
+        new_cache = {"self": node.with_layers(new_leaves),
+                     "cross": cache["cross"]}
+
+    return _logits_head(params, cfg, x, rules), new_cache
 
 
 # =========================== in-graph generation ============================
@@ -418,6 +518,31 @@ def resolved_attn_impl(cfg: ModelConfig, kv_impl: str) -> str:
     return f"xla-gather:{kv_impl}"
 
 
+def resolved_prefill_impl(cfg: ModelConfig, kv_impl: str,
+                          prefill: str = "oneshot") -> str:
+    """Which PREFILL attention path a (cfg, kv_impl, prefill) triple
+    actually runs — the prefill-side twin of ``resolved_attn_impl``.
+
+    "dense-bucketed" is the one-shot path: admission computes
+    attention over the dense (right-padded / bucketed) prompt q/k/v,
+    whatever the KV layout. "flash-paged:*" is chunked prefill
+    streaming prior K/V through the block table
+    (``kernels.flash_prefill``) — ``:interpret`` off TPU, a
+    correctness path whose timings must never be read as TPU numbers.
+    "xla-chunked" is chunked prefill on the gather fallback. Pure-SSM
+    families have no attention prefill at all.
+    """
+    if kv_key(cfg) is None:
+        return "attention-free"
+    if prefill == "chunked":
+        if cfg.attn_impl == "pallas" and kv_impl == "paged":
+            from ..kernels import on_tpu
+            return "flash-paged:" + ("compiled" if on_tpu()
+                                     else "interpret")
+        return "xla-chunked"
+    return "dense-bucketed"
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class GenerateResult:
@@ -433,8 +558,12 @@ class GenerateResult:
     ``attn_impl`` reports the decode-attention path that actually ran
     (``resolved_attn_impl``): "xla-gather:dense", "xla-gather:paged",
     "pallas-paged:compiled", "pallas-paged:interpret", or
-    "attention-free" (pure-SSM families) — static metadata (pytree
-    aux), so jitted callers carry it for free.
+    "attention-free" (pure-SSM families); ``prefill_impl`` reports the
+    PREFILL path the same way (``resolved_prefill_impl``):
+    "dense-bucketed", "flash-paged:compiled", "flash-paged:interpret",
+    "xla-chunked", or "attention-free" — so interleaved-mode CPU
+    interpret numbers can't be misread as TPU numbers. Both are static
+    metadata (pytree aux), so jitted callers carry them for free.
     """
 
     tokens: jax.Array        # (B, max_new)
@@ -442,25 +571,26 @@ class GenerateResult:
     steps: jax.Array         # scalar: loop iterations actually run
     text_lengths: jax.Array  # (B,) tokens before EOS
     attn_impl: str = ""      # resolved decode-attention path (static)
+    prefill_impl: str = ""   # resolved prefill-attention path (static)
 
     def tree_flatten(self):
         return (self.tokens, self.lengths, self.steps,
-                self.text_lengths), (self.attn_impl,)
+                self.text_lengths), (self.attn_impl, self.prefill_impl)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, attn_impl=aux[0])
+        return cls(*children, attn_impl=aux[0], prefill_impl=aux[1])
 
 
-def _result_from_tokens(toks, eos_id, steps,
-                        attn_impl: str = "") -> "GenerateResult":
+def _result_from_tokens(toks, eos_id, steps, attn_impl: str = "",
+                        prefill_impl: str = "") -> "GenerateResult":
     has_eos = (toks == eos_id).any(axis=1)
     first_eos = jnp.argmax(toks == eos_id, axis=1)
     lengths = jnp.where(has_eos, first_eos + 1, toks.shape[1])
     return GenerateResult(tokens=toks, lengths=lengths,
                           steps=jnp.asarray(steps, jnp.int32),
                           text_lengths=lengths - has_eos,
-                          attn_impl=attn_impl)
+                          attn_impl=attn_impl, prefill_impl=prefill_impl)
 
 
 def generate_batch_sync(params, cfg: ModelConfig, prompt: jax.Array, *,
@@ -518,8 +648,9 @@ def generate_batch_sync(params, cfg: ModelConfig, prompt: jax.Array, *,
                            cache, out_ta),
         max_iters=max_new, name="generate")
     toks = ta.stack().T                                  # (B, max_new)
-    return _result_from_tokens(toks, eos_id, i,
-                               attn_impl=resolved_attn_impl(cfg, kv_impl))
+    return _result_from_tokens(
+        toks, eos_id, i, attn_impl=resolved_attn_impl(cfg, kv_impl),
+        prefill_impl=resolved_prefill_impl(cfg, kv_impl, "oneshot"))
 
 
 # Wrapper scheduler reuse: jit caches key on closure identity, so a
@@ -597,4 +728,5 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, max_new: int,
         toks[f.request_id, :f.length] = f.tokens
     return _result_from_tokens(jnp.asarray(toks), eos_id,
                                sched.total_steps - steps_before,
-                               attn_impl=resolved_attn_impl(cfg, kv_impl))
+                               attn_impl=sched.attn_impl,
+                               prefill_impl=sched.prefill_impl)

@@ -26,8 +26,10 @@ Layout invariants:
 
 - Per-layer state is scanned: ``cache.layers`` is a pytree whose leaves
   carry the layer dim in front, ``cache.view(leaves)`` binds one
-  layer's state into a ``view`` with ``write_prompt`` / ``append`` /
-  ``gather``, and ``cache.with_layers(stacked)`` rebuilds the cache
+  layer's state into a ``view`` with ``write_prompt`` /
+  ``write_chunk`` (a prompt chunk at per-row base offsets — the
+  chunked-prefill write) / ``append`` / ``gather``, and
+  ``cache.with_layers(stacked)`` rebuilds the cache
   from the scan's stacked outputs. Block tables are **shared across
   layers** (row r's logical block b lives at the same physical id in
   every layer's pool), which is what lets the per-layer view be a pure
@@ -116,6 +118,26 @@ class DenseView:
                 jnp.where(m, vd, self.v[rows, :S]))
         return dataclasses.replace(self, k=kc, v=vc)
 
+    def write_chunk(self, k: jax.Array, v: jax.Array,
+                    offsets) -> "DenseView":
+        """Write a prompt CHUNK ``(n, C, KV, hd)`` at per-row base
+        offsets: row ``i``'s chunk lands at positions
+        ``[offsets[i], offsets[i] + C)`` — the chunked-prefill write
+        (``write_prompt`` is the ``offsets == 0`` special case).
+        Out-of-range positions and unmasked rows drop."""
+        n, C = k.shape[0], k.shape[1]
+        rows = _bcast_rows(self.rows, n)
+        pos = jnp.asarray(offsets, jnp.int32)[:, None] \
+            + jnp.arange(C, dtype=jnp.int32)[None, :]          # (n, C)
+        keep = pos < self.k.shape[1]
+        if self.mask is not None:
+            keep = keep & self.mask[:, None]
+        # invalid lanes route to row index n_rows -> dropped scatter
+        rix = jnp.where(keep, rows[:, None], self.k.shape[0])
+        kc = self.k.at[rix, pos].set(k.astype(self.k.dtype), mode="drop")
+        vc = self.v.at[rix, pos].set(v.astype(self.v.dtype), mode="drop")
+        return dataclasses.replace(self, k=kc, v=vc)
+
     def append(self, k: jax.Array, v: jax.Array, cur_len) -> "DenseView":
         """Write the single-token K/V ``(n, 1, KV, hd)`` at
         ``cur_len - 1`` (scalar: whole batch in lockstep; vector:
@@ -195,24 +217,42 @@ class PagedView:
 
     def _phys(self, rows, pos):
         """Physical (block, offset) for logical positions; unallocated
-        positions map to block id ``n_blocks`` (dropped on scatter)."""
-        blk = self.table[rows, pos // self.block]
-        return jnp.where(blk >= 0, blk, self.n_blocks), pos % self.block
+        positions — and positions past the table's width, which a
+        ragged chunked-prefill tail can produce — map to block id
+        ``n_blocks`` (dropped on scatter). Without the column guard an
+        out-of-range ``pos // block`` would CLAMP into the row's last
+        real block and corrupt it."""
+        bpr = self.table.shape[1]
+        col = pos // self.block
+        blk = self.table[rows, jnp.minimum(col, bpr - 1)]
+        blk = jnp.where((blk >= 0) & (col < bpr), blk, self.n_blocks)
+        return blk, pos % self.block
 
     def write_prompt(self, k: jax.Array, v: jax.Array) -> "PagedView":
-        n, S = k.shape[0], k.shape[1]
+        return self.write_chunk(k, v, jnp.zeros((k.shape[0],), jnp.int32))
+
+    def write_chunk(self, k: jax.Array, v: jax.Array,
+                    offsets) -> "PagedView":
+        """Write a prompt CHUNK ``(n, C, KV, hd)`` at per-row base
+        offsets through the block table (``write_prompt`` is the
+        ``offsets == 0`` special case). Positions past a row's
+        allocated blocks hit ``-1`` table entries and drop — a ragged
+        final chunk writes its real lanes and nothing else it
+        shouldn't."""
+        n, C = k.shape[0], k.shape[1]
         rows = _bcast_rows(self.rows, n)
-        pos = jnp.arange(S, dtype=jnp.int32)
-        blk, off = self._phys(rows[:, None], pos[None, :])     # (n, S)
+        pos = jnp.asarray(offsets, jnp.int32)[:, None] \
+            + jnp.arange(C, dtype=jnp.int32)[None, :]          # (n, C)
+        blk, off = self._phys(rows[:, None], pos)
         if self.mask is not None:
             blk = jnp.where(self.mask[:, None], blk, self.n_blocks)
         fb = blk.reshape(-1)
-        fo = jnp.broadcast_to(off, (n, S)).reshape(-1)
+        fo = off.reshape(-1)
         kp = self.k_pool.at[fb, fo].set(
-            k.astype(self.k_pool.dtype).reshape((n * S,) + k.shape[2:]),
+            k.astype(self.k_pool.dtype).reshape((n * C,) + k.shape[2:]),
             mode="drop")
         vp = self.v_pool.at[fb, fo].set(
-            v.astype(self.v_pool.dtype).reshape((n * S,) + v.shape[2:]),
+            v.astype(self.v_pool.dtype).reshape((n * C,) + v.shape[2:]),
             mode="drop")
         return dataclasses.replace(self, k_pool=kp, v_pool=vp)
 
@@ -259,14 +299,15 @@ class PagedView:
         return kg[:, :self.max_len], vg[:, :self.max_len]
 
     def paged_state(self):
-        """Gather-free decode operands ``(k_pool, v_pool, table)`` —
+        """Gather-free kernel operands ``(k_pool, v_pool, table)`` —
         the per-row binding applied, so row ``i`` of the returned
-        table is the table of the view's logical row ``i``. Returns
-        None when a ``mask`` is bound (an admission-path view; the
-        kernel dispatch only ever sees decode views, which bind
-        neither rows nor mask)."""
-        if self.mask is not None:
-            return None
+        table is the table of the view's logical row ``i``. A bound
+        ``mask`` gates WRITES only (``append``/``write_chunk``);
+        reading through the table is a layout fact, not a lifecycle
+        one, so masked views (the chunked-prefill/decode steps, where
+        only some rows are advancing) still hand the kernels their
+        state — unmasked rows' lanes are garbage the caller discards,
+        exactly like the gather path."""
         table = self.table if self.rows is None else self.table[self.rows]
         return self.k_pool, self.v_pool, table
 

@@ -23,7 +23,30 @@ key). Three layers:
    occupancy and returns to the host exactly when enough slots have
    freed for a scheduling decision to be worth making.
 
-2. **Batched prefill-into-slot** (``_admit``): all queued prompts with
+2a. **Chunked prefill, interleaved with decode**
+   (``prefill="chunked"``, attention-decoder families —
+   dense/moe/vlm): admission becomes *assign slot + alloc blocks* — a cheap
+   register/table scatter with NO model forward — and the prompt
+   itself is prefilled **inside the decode loop**: every loop
+   iteration advances each prefilling slot by at most ``chunk_tokens``
+   stream positions (``engine.prefill_chunk`` — K/V written through
+   the cache view at per-slot offsets, attention against prior chunks
+   through the block table when the Pallas path is on) *and* decodes
+   every running slot one token. A long prompt therefore never stalls
+   running slots for its full length: the inter-token gap of a
+   decoding slot is bounded by one decode step plus one
+   ``chunk_tokens`` chunk, whatever arrives (the vLLM/Sarathi
+   scheduling argument, and the paper's §3.3 non-strict execution:
+   independent subcomputations overlap instead of serializing).
+   Slots gain a third in-graph state: FREE → **PREFILLING**
+   (``prefilling``, per-slot progress vector ``pf_pos``) → RUNNING →
+   DONE. The chunk whose window covers a slot's last real stream
+   position samples its first token and flips it to RUNNING in the
+   same iteration. One compiled step serves every prompt length —
+   chunked mode needs no prefill buckets at all.
+
+2b. **Batched prefill-into-slot** (``_admit``, ``prefill="oneshot"``):
+   all queued prompts with
    a free slot are prefilled together as one ``n_slots``-wide batch.
    Admission first calls ``KVCache.free`` + ``KVCache.alloc`` for the
    filled rows (no-ops for the dense cache; block-table assignment for
@@ -96,9 +119,14 @@ from . import engine, kv_cache as kvc, sampling as sampling_lib
 class SlotPool:
     """Device-resident scheduler state; all leaves are arrays.
 
-    Slot lifecycle: FREE (``~active & ~done``) → RUNNING (``active``,
-    via ``_admit``) → DONE (``done``, retired in-graph on EOS/budget,
-    cache rows freed in-graph) → FREE (host harvest clears ``done``).
+    Slot lifecycle: FREE (``~active & ~prefilling & ~done``) →
+    [chunked mode: PREFILLING (``prefilling``, assigned by ``_assign``,
+    prompt advanced ``chunk_tokens``/iteration in-graph) →]
+    RUNNING (``active``) → DONE (``done``, retired in-graph on
+    EOS/budget, cache rows freed in-graph) → FREE (host harvest clears
+    ``done``). One-shot mode enters RUNNING directly via ``_admit``
+    and the prefill fields ride along empty (``prompt`` is
+    zero-width).
     """
 
     cache: Any               # engine.make_cache(cfg, n_slots, max_len, ...)
@@ -111,14 +139,26 @@ class SlotPool:
     request_id: jax.Array    # (n,) int32
     keys: jax.Array          # (n, 2) uint32 — per-request PRNG keys
     out: jax.Array           # (n, max_new_cap) int32 — emissions
-    steps: jax.Array         # scalar int32 — decode iterations run
+    steps: jax.Array         # scalar int32 — loop iterations run
+                             # (chunked: incl. prefill-only ones)
     slot_steps: jax.Array    # scalar int32 — Σ active slots per iteration
                              # (in-graph occupancy accounting)
+    prompt: jax.Array        # (n, prompt_len | 0) int32 — resident
+                             # prompt tokens (chunked mode)
+    plen: jax.Array          # (n,) int32 — total prefill stream length
+                             # (prefix + true prompt length)
+    pf_pos: jax.Array        # (n,) int32 — prefill progress (stream
+                             # positions already written)
+    prefilling: jax.Array    # (n,) bool — slot mid-prefill
+    prefix: Any = None       # (n, prefix_len, d) patch prefix embeds
+                             # (chunked VLM pools; else None)
 
     def tree_flatten(self):
         return (self.cache, self.next_token, self.cur_len, self.n_emitted,
                 self.budget, self.active, self.done, self.request_id,
-                self.keys, self.out, self.steps, self.slot_steps), None
+                self.keys, self.out, self.steps, self.slot_steps,
+                self.prompt, self.plen, self.pf_pos, self.prefilling,
+                self.prefix), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -148,14 +188,17 @@ class _Queued:
 
 def pool_shardings(cfg, n_slots: int, max_len: int, max_new_cap: int,
                    rules, mesh=None, *, kv: str = "dense",
-                   kv_block: int = 16, kv_blocks: Optional[int] = None):
+                   kv_block: int = 16, kv_blocks: Optional[int] = None,
+                   prompt_len: int = 0, prefix_len: int = 0):
     """NamedShardings for a ``SlotPool`` under ``rules``.
 
-    Per-slot registers and dense cache rows shard over the ``SLOT``
-    logical axis (→ the data mesh axes); a paged cache's block pool
-    shards over ``BLOCK`` instead (``KVCache.shardings``).
-    Non-dividing counts fall back to replicated via the dims-aware
-    spec.
+    Per-slot registers, dense cache rows, and the chunked-mode prompt
+    buffers shard over the ``SLOT`` logical axis (→ the data mesh
+    axes); a paged cache's block pool shards over ``BLOCK`` instead
+    (``KVCache.shardings``). ``prompt_len``/``prefix_len`` size the
+    chunked-prefill buffers (0 = one-shot pool, zero-width buffer /
+    no prefix leaf). Non-dividing counts fall back to replicated via
+    the dims-aware spec.
     """
     abs_cache = engine.make_cache(cfg, n_slots, max_len, mode="abstract",
                                   kv_impl=kv, kv_block=kv_block,
@@ -170,7 +213,13 @@ def pool_shardings(cfg, n_slots: int, max_len: int, max_new_cap: int,
         keys=rules.sharding((sh.SLOT, None), mesh, dims=(n_slots, 2)),
         out=rules.sharding((sh.SLOT, None), mesh,
                            dims=(n_slots, max_new_cap)),
-        steps=rep, slot_steps=rep)
+        steps=rep, slot_steps=rep,
+        prompt=rules.sharding((sh.SLOT, None), mesh,
+                              dims=(n_slots, prompt_len)),
+        plen=vec, pf_pos=vec, prefilling=vec,
+        prefix=(rules.sharding((sh.SLOT, None, None), mesh,
+                               dims=(n_slots, prefix_len, cfg.d_model))
+                if prefix_len else None))
 
 
 # =========================== scheduler ======================================
@@ -209,6 +258,22 @@ class DecodeScheduler:
         because each request only holds
         ``ceil((true_prompt + prefix + max_new + 1) / kv_block)``
         blocks instead of a full ``max_len`` column.
+      prefill: "oneshot" (admission runs one monolithic batched
+        prefill, stalling running slots for the whole prompt) or
+        "chunked" (admission just assigns the slot and allocs blocks;
+        the prompt prefills INSIDE the decode loop, ``chunk_tokens``
+        stream positions per iteration, interleaved with one decode
+        token for every running slot — bounded per-step work, so a
+        long prompt cannot stall the pool). Chunked requires an
+        attention-decoder family (dense/moe/vlm): SSM/hybrid fold
+        recurrent state through a full-prompt forward and audio needs
+        its encoder run up front. Greedy outputs are bit-identical
+        between the two modes (tests pin it across chunk sizes).
+      chunk_tokens: chunked-mode prefill chunk size (stream positions
+        advanced per in-graph iteration per prefilling slot). Smaller
+        = tighter inter-token latency bound for running slots, more
+        iterations per prompt; the compiled step count does NOT depend
+        on it (one trace serves every prompt length — no buckets).
     """
 
     def __init__(self, params, cfg, *, n_slots: int, prompt_len: int,
@@ -217,13 +282,25 @@ class DecodeScheduler:
                  sampling_lib.SamplingParams(),
                  rules=None, mesh=None, prefix_len: int = 0, seed: int = 0,
                  admit_threshold: int = 1, kv: str = "dense",
-                 kv_block: int = 16, kv_blocks: Optional[int] = None):
+                 kv_block: int = 16, kv_blocks: Optional[int] = None,
+                 prefill: str = "oneshot", chunk_tokens: int = 16):
         if n_slots < 1 or max_new_cap < 1:
             raise ValueError("need n_slots >= 1 and max_new_cap >= 1")
         if not 1 <= admit_threshold <= n_slots:
             raise ValueError("admit_threshold must be in [1, n_slots]")
         if kv not in ("dense", "paged"):
             raise ValueError(f"kv must be 'dense' or 'paged'; got {kv!r}")
+        if prefill not in ("oneshot", "chunked"):
+            raise ValueError(f"prefill must be 'oneshot' or 'chunked'; "
+                             f"got {prefill!r}")
+        if prefill == "chunked":
+            if cfg.family not in ("dense", "moe", "vlm"):
+                raise ValueError(
+                    f"prefill='chunked' requires an attention-decoder "
+                    f"family (dense/moe/vlm); family {cfg.family!r} "
+                    f"prefills through a full-prompt forward")
+            if chunk_tokens < 1:
+                raise ValueError("chunk_tokens must be >= 1")
         if prefix_len and (cfg.family != "vlm"
                            or prefix_len != cfg.n_patches):
             # The in-graph admission derives the patch prefix from
@@ -246,6 +323,8 @@ class DecodeScheduler:
         self.prefix_len = prefix_len
         self.admit_threshold = admit_threshold
         self.max_len = prompt_len + prefix_len + max_new_cap + 1
+        self.prefill = prefill
+        self.chunk_tokens = int(chunk_tokens)
         self.kv = kv
         self.kv_block = kv_block
         self.kv_blocks = (n_slots * kvc.blocks_needed(self.max_len,
@@ -258,8 +337,14 @@ class DecodeScheduler:
         # tail, and MoE capacity-limited routing lets pad tokens
         # displace real ones from expert slots — both would silently
         # break the bit-identical guarantee, so those families require
-        # exact-length prompts (one prefill shape, as before).
-        self._bucketed = cfg.family in ("dense", "vlm", "audio")
+        # exact-length prompts (one prefill shape, as before). Chunked
+        # mode keeps the same per-family rule: a ragged final chunk
+        # puts its garbage tail inside the row's own routing group, so
+        # MoE stays exact-length there too.
+        if prefill == "chunked":
+            self._bucketed = cfg.family in ("dense", "vlm")
+        else:
+            self._bucketed = cfg.family in ("dense", "vlm", "audio")
         self._base_key = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self.queue: List[_Queued] = []
@@ -270,17 +355,24 @@ class DecodeScheduler:
         self._slot_blocks = np.zeros(n_slots, np.int64)
         self._free_blocks = self.kv_blocks
         # driver stats (busy_slot_steps lives in-graph: pool.slot_steps)
-        self.total_steps = 0          # decode iterations across segments
+        self.total_steps = 0          # loop iterations across segments
         self.tokens_emitted = 0
 
         self.pool = self._init_pool()
-        self._admit_fn = jax.jit(self._build_admit())
+        # chunked admission runs NO model forward: assign registers +
+        # alloc blocks, and let the in-graph step do the prefilling
+        self._admit_fn = jax.jit(self._build_assign()
+                                 if prefill == "chunked"
+                                 else self._build_admit())
         self._step_fn = jax.jit(self._build_step())
 
     # ---------------- pool construction ----------------
 
     def _init_pool(self) -> SlotPool:
         n, cap = self.n_slots, self.max_new_cap
+        chunked = self.prefill == "chunked"
+        pbuf = self.prompt_len if chunked else 0
+        pfx = self.prefix_len if chunked else 0
         pool = SlotPool(
             cache=engine.make_cache(self.cfg, n, self.max_len,
                                     kv_impl=self.kv, kv_block=self.kv_block,
@@ -295,13 +387,21 @@ class DecodeScheduler:
             keys=jnp.zeros((n, 2), jnp.uint32),
             out=jnp.zeros((n, cap), jnp.int32),
             steps=jnp.asarray(0, jnp.int32),
-            slot_steps=jnp.asarray(0, jnp.int32))
+            slot_steps=jnp.asarray(0, jnp.int32),
+            prompt=jnp.zeros((n, pbuf), jnp.int32),
+            plen=jnp.zeros((n,), jnp.int32),
+            pf_pos=jnp.zeros((n,), jnp.int32),
+            prefilling=jnp.zeros((n,), bool),
+            prefix=(jnp.zeros((n, pfx, self.cfg.d_model),
+                              self.cfg.dtype("compute"))
+                    if pfx else None))
         if self.rules is not None and self.mesh is not None \
                 and self.mesh.size > 1:
             shd = pool_shardings(self.cfg, n, self.max_len, cap,
                                  self.rules, self.mesh, kv=self.kv,
                                  kv_block=self.kv_block,
-                                 kv_blocks=self.kv_blocks)
+                                 kv_blocks=self.kv_blocks,
+                                 prompt_len=pbuf, prefix_len=pfx)
             pool = jax.tree.map(jax.device_put, pool, shd)
         return pool
 
@@ -383,8 +483,8 @@ class DecodeScheduler:
                     new_cache[key] = jax.tree.map(splice, pool.cache[key],
                                                   cacheB[key])
 
-            return SlotPool(
-                cache=new_cache,
+            return dataclasses.replace(
+                pool, cache=new_cache,
                 next_token=sreg(pool.next_token, tok0),
                 cur_len=sreg(pool.cur_len, cur0.astype(jnp.int32)),
                 n_emitted=sreg(pool.n_emitted, jnp.zeros((n,), jnp.int32)),
@@ -393,10 +493,71 @@ class DecodeScheduler:
                 done=sreg(pool.done, jnp.zeros((n,), bool)),
                 request_id=sreg(pool.request_id, rids),
                 keys=sreg(pool.keys, rkeys),
-                out=sreg(pool.out, jnp.zeros_like(pool.out)),
-                steps=pool.steps, slot_steps=pool.slot_steps)
+                out=sreg(pool.out, jnp.zeros_like(pool.out)))
 
         return admit
+
+    # ---------------- in-graph admission (chunked: assign only) -------
+
+    def _build_assign(self):
+        """Chunked-mode admission: assign slot + alloc blocks, NO model
+        forward — the prompt rides into the pool's resident buffers and
+        the in-graph step prefills it ``chunk_tokens`` positions per
+        iteration, interleaved with decode. Admission cost is a
+        register/table scatter however long the prompt is.
+        """
+        n, kv_key = self.n_slots, self._kv_key
+        base_key = self._base_key
+
+        def assign(params, pool: SlotPool, prompts, plens, slots, rids,
+                   max_news, keys, derive, mask, prefix) -> SlotPool:
+            """Assign up to n requests into free slots.
+
+            prompts (n, prompt_len) right-padded token buffers; plens
+            (n,) total prefill STREAM lengths (prefix + true prompt
+            length); slots/mask/rids/max_news/keys/derive as in
+            ``_admit``; prefix (n, prefix_len, d) patch embeds or
+            None. ``params`` is unused (signature kept parallel to
+            ``_admit`` so the host driver is mode-agnostic).
+            """
+            del params
+            cache = pool.cache
+            # Lifecycle exactly as one-shot admission: release the
+            # freed slot's previous blocks, reserve this request's own
+            # budget. The blocks are reserved BEFORE any prefill runs,
+            # so chunk writes always have somewhere to land.
+            node = cache[kv_key].free(slots, mask=mask)
+            node = node.alloc(slots, plens + max_news + 1, mask=mask)
+            cache = {**cache, kv_key: node}
+            rkeys = jnp.where(
+                derive[:, None],
+                jax.vmap(lambda r: jax.random.fold_in(base_key, r))(rids),
+                keys)
+
+            def sreg(vec, new):
+                m = mask.reshape((n,) + (1,) * (vec.ndim - 1))
+                return vec.at[slots].set(
+                    jnp.where(m, new.astype(vec.dtype), vec[slots]))
+
+            return dataclasses.replace(
+                pool, cache=cache,
+                next_token=sreg(pool.next_token, jnp.zeros((n,), jnp.int32)),
+                cur_len=sreg(pool.cur_len, jnp.ones((n,), jnp.int32)),
+                n_emitted=sreg(pool.n_emitted, jnp.zeros((n,), jnp.int32)),
+                budget=sreg(pool.budget, max_news),
+                active=sreg(pool.active, jnp.zeros((n,), bool)),
+                done=sreg(pool.done, jnp.zeros((n,), bool)),
+                request_id=sreg(pool.request_id, rids),
+                keys=sreg(pool.keys, rkeys),
+                out=sreg(pool.out, jnp.zeros_like(pool.out)),
+                prompt=sreg(pool.prompt, prompts),
+                plen=sreg(pool.plen, plens),
+                pf_pos=sreg(pool.pf_pos, jnp.zeros((n,), jnp.int32)),
+                prefilling=sreg(pool.prefilling, jnp.ones((n,), bool)),
+                prefix=(pool.prefix if prefix is None
+                        else sreg(pool.prefix, prefix)))
+
+        return assign
 
     # ---------------- in-graph decode segment -------------------------
 
@@ -404,72 +565,136 @@ class DecodeScheduler:
         cfg, rules, sp = self.cfg, self.rules, self.sampling
         eos_id, cap, n = self.eos_id, self.max_new_cap, self.n_slots
         kv_key = self._kv_key
+        chunked = self.prefill == "chunked"
+        C = self.chunk_tokens
+        if chunked:
+            stream = self.prompt_len + self.prefix_len
+            max_iters = cap + -(-stream // C) + 1
+        else:
+            max_iters = cap
+
+        def chunk_fn(params, p: SlotPool) -> SlotPool:
+            """Advance every PREFILLING slot by one <=C-token chunk.
+
+            ``engine.prefill_chunk`` writes the chunk's K/V at each
+            row's own ``pf_pos`` offset (masked: only prefilling rows
+            write) and attends against prior chunks through the cache
+            view. A slot whose window covers its last real stream
+            position samples its first token from that position's
+            logits — exactly the lane the one-shot admission samples —
+            and flips PREFILLING → RUNNING, so it decodes in this very
+            iteration.
+            """
+            logits, cache = engine.prefill_chunk(
+                params, cfg, p.prompt, p.cache, p.pf_pos, rules,
+                chunk=C, mask=p.prefilling, prefix_embeds=p.prefix)
+            fin = p.prefilling & (p.pf_pos + C >= p.plen)
+            last = jnp.clip(p.plen - 1 - p.pf_pos, 0, C - 1)
+            k0 = sampling_lib.step_keys(p.keys, jnp.zeros((n,), jnp.int32))
+            t0 = sampling_lib.sample_slots(
+                logits[jnp.arange(n), last], k0, sp)
+            return dataclasses.replace(
+                p, cache=cache,
+                next_token=jnp.where(fin, t0, p.next_token),
+                cur_len=jnp.where(fin, p.plen + 1, p.cur_len),
+                pf_pos=jnp.where(p.prefilling, p.pf_pos + C, p.pf_pos),
+                prefilling=p.prefilling & ~fin,
+                active=p.active | fin)
+
+        def decode_fn(params, p: SlotPool) -> SlotPool:
+            tok = p.next_token                           # (n,)
+            emit = p.active
+            row = jnp.arange(n)
+            idx = jnp.clip(p.n_emitted, 0, cap - 1)
+            out = p.out.at[row, idx].set(
+                jnp.where(emit, tok, p.out[row, idx]))
+            n_emitted = p.n_emitted + emit
+            finished = emit & ((tok == eos_id)
+                               | (n_emitted >= p.budget))
+            active = emit & ~finished
+            # Slot retirement frees the cache row IN-GRAPH: a paged
+            # slot's blocks return to the free-list here, inside
+            # the decode loop (dense: no-op). The retired row's
+            # subsequent garbage appends route to the drop index,
+            # so recycled blocks are never corrupted.
+            cache = p.cache
+            if kv_key is not None:
+                cache = {**cache,
+                         kv_key: cache[kv_key].free(mask=finished)}
+            # Decode all slots (inactive rows compute garbage that
+            # is masked). One-shot mode can let inactive rows write
+            # garbage (their rows are rewritten at admission / their
+            # freed tables drop it); chunked mode must NOT — a
+            # mid-prefill slot's stale cur_len points INTO its
+            # already-written prompt — so the append is gated.
+            logits, cache = engine.decode_step(
+                params, cfg, tok[:, None], cache, p.cur_len, rules,
+                write_mask=emit if chunked else None)
+            keys = sampling_lib.step_keys(p.keys, n_emitted)
+            nxt = sampling_lib.sample_slots(logits[:, 0], keys, sp)
+            return dataclasses.replace(
+                p, cache=cache,
+                next_token=jnp.where(active, nxt, tok),
+                cur_len=p.cur_len + active,
+                n_emitted=n_emitted,
+                active=active,
+                done=p.done | finished,
+                out=out,
+                slot_steps=p.slot_steps
+                + jnp.sum(emit).astype(jnp.int32))
 
         def step(params, pool: SlotPool, want) -> SlotPool:
             """One device segment.
 
             ``want`` (traced scalar) is the number of free slots worth
             returning to the host for: the loop runs while any slot is
-            active AND fewer than ``want`` slots are idle. The host
-            passes ``min(admit_threshold, len(queue))``, or
-            ``n_slots + 1`` when the queue is empty — then the
-            predicate reduces to ``any(active)`` and the whole drain
-            tail costs one dispatch (a freed slot has no successor, so
-            retirement is no reason to pause; outputs wait for
-            harvest).
+            busy (active or prefilling) AND fewer than ``want`` slots
+            are idle. The host passes
+            ``min(admit_threshold, len(queue))``, or ``n_slots + 1``
+            with an empty queue — then the predicate reduces to
+            ``any(busy)`` and the whole drain tail costs one dispatch
+            (a freed slot has no successor, so retirement is no reason
+            to pause; outputs wait for harvest).
+
+            Chunked mode interleaves inside each iteration: at most
+            one ``chunk_tokens`` prefill chunk for every prefilling
+            slot (skipped at runtime when none is — steady-state
+            decode pays nothing) and one decode token for every
+            running slot. Per-iteration work is bounded whatever
+            prompt is being admitted — the inter-token latency bound
+            the one-shot admission can't give.
             """
             def cond_fn(p: SlotPool):
-                idle = n - jnp.sum(p.active).astype(jnp.int32)
-                return jnp.any(p.active) & (idle < want)
+                busy = p.active | p.prefilling
+                idle = n - jnp.sum(busy).astype(jnp.int32)
+                return jnp.any(busy) & (idle < want)
 
             # Entering a segment implies the host harvested the previous
             # one: clear `done` here (free, in-graph) instead of paying
             # a host-side dispatch per harvest.
             pool = dataclasses.replace(pool,
                                        done=jnp.zeros_like(pool.done))
-            def body_fn(p: SlotPool) -> SlotPool:
-                tok = p.next_token                           # (n,)
-                emit = p.active
-                row = jnp.arange(n)
-                idx = jnp.clip(p.n_emitted, 0, cap - 1)
-                out = p.out.at[row, idx].set(
-                    jnp.where(emit, tok, p.out[row, idx]))
-                n_emitted = p.n_emitted + emit
-                finished = emit & ((tok == eos_id)
-                                   | (n_emitted >= p.budget))
-                active = emit & ~finished
-                # Slot retirement frees the cache row IN-GRAPH: a paged
-                # slot's blocks return to the free-list here, inside
-                # the decode loop (dense: no-op). The retired row's
-                # subsequent garbage appends route to the drop index,
-                # so recycled blocks are never corrupted.
-                cache = p.cache
-                if kv_key is not None:
-                    cache = {**cache,
-                             kv_key: cache[kv_key].free(mask=finished)}
-                # Decode all slots (inactive rows compute garbage that
-                # is masked; their rows are rewritten at admission).
-                logits, cache = engine.decode_step(
-                    params, cfg, tok[:, None], cache, p.cur_len, rules)
-                keys = sampling_lib.step_keys(p.keys, n_emitted)
-                nxt = sampling_lib.sample_slots(logits[:, 0], keys, sp)
-                return SlotPool(
-                    cache=cache,
-                    next_token=jnp.where(active, nxt, tok),
-                    cur_len=p.cur_len + active,
-                    n_emitted=n_emitted,
-                    budget=p.budget,
-                    active=active,
-                    done=p.done | finished,
-                    request_id=p.request_id,
-                    keys=p.keys,
-                    out=out,
-                    steps=p.steps + 1,
-                    slot_steps=p.slot_steps
-                    + jnp.sum(emit).astype(jnp.int32))
 
-            return core.while_loop(cond_fn, body_fn, pool, max_iters=cap,
-                                   name="serve_step")
+            def body_fn(p: SlotPool) -> SlotPool:
+                if chunked:
+                    p = jax.lax.cond(jnp.any(p.prefilling),
+                                     lambda q: chunk_fn(params, q),
+                                     lambda q: q, p)
+                    # decode only when someone is actually running
+                    # (pure-prefill iterations skip the dispatch; a
+                    # slot that just finished its chunk decodes NOW)
+                    p = jax.lax.cond(jnp.any(p.active),
+                                     lambda q: decode_fn(params, q),
+                                     lambda q: q, p)
+                else:
+                    p = decode_fn(params, p)
+                # steps counts LOOP iterations — including chunked
+                # mode's prefill-only ones, so per-iteration wall
+                # derivations and occupancy denominators stay honest
+                return dataclasses.replace(p, steps=p.steps + 1)
+
+            return core.while_loop(cond_fn, body_fn, pool,
+                                   max_iters=max_iters, name="serve_step")
 
         return step
 
@@ -493,14 +718,23 @@ class DecodeScheduler:
         prefix_embeds = (jnp.zeros((n, self.prefix_len,
                                     self.cfg.d_model), cdt)
                          if self.prefix_len > 0 else None)
-        frames = (jnp.zeros((n, self.cfg.n_frames, self.cfg.d_model), cdt)
-                  if self.cfg.family == "audio" else None)
-        pool = self._admit_fn(
-            self.params, self.pool, np.zeros((n, L), np.int32),
-            np.full(n, L, np.int32), np.arange(n, dtype=np.int32),
-            np.full(n, -1, np.int32), np.zeros(n, np.int32),
-            np.zeros((n, 2), np.uint32), np.zeros(n, bool),
-            np.zeros(n, bool), prefix_embeds, frames)
+        if self.prefill == "chunked":
+            pool = self._admit_fn(
+                self.params, self.pool, np.zeros((n, L), np.int32),
+                np.full(n, L + self.prefix_len, np.int32),
+                np.arange(n, dtype=np.int32), np.full(n, -1, np.int32),
+                np.zeros(n, np.int32), np.zeros((n, 2), np.uint32),
+                np.zeros(n, bool), np.zeros(n, bool), prefix_embeds)
+        else:
+            frames = (jnp.zeros((n, self.cfg.n_frames, self.cfg.d_model),
+                                cdt)
+                      if self.cfg.family == "audio" else None)
+            pool = self._admit_fn(
+                self.params, self.pool, np.zeros((n, L), np.int32),
+                np.full(n, L, np.int32), np.arange(n, dtype=np.int32),
+                np.full(n, -1, np.int32), np.zeros(n, np.int32),
+                np.zeros((n, 2), np.uint32), np.zeros(n, bool),
+                np.zeros(n, bool), prefix_embeds, frames)
         pool = self._step_fn(self.params, pool,
                              np.int32(self.n_slots + 1))
         jax.block_until_ready(pool.next_token)
@@ -633,7 +867,9 @@ class DecodeScheduler:
             self.queue[:0] = batch   # coalesce: admit on a later round
             return 0
         n = self.n_slots
-        L = max(self._bucket(q.prompt.shape[1]) for q in batch)
+        chunked = self.prefill == "chunked"
+        L = (self.prompt_len if chunked
+             else max(self._bucket(q.prompt.shape[1]) for q in batch))
         free = np.nonzero(~self._busy)[0]
         busy = np.nonzero(self._busy)[0]
         slots = np.concatenate([free, busy]).astype(np.int32)  # permutation
@@ -671,9 +907,18 @@ class DecodeScheduler:
             for i, q in enumerate(batch):
                 if q.frames is not None:
                     frames[i] = np.asarray(q.frames)[0]
-        self.pool = self._admit_fn(self.params, self.pool, prompts,
-                                   true_lens, slots, rids, max_news, keys,
-                                   derive, mask, prefix_embeds, frames)
+        if chunked:
+            # assign-only admission: registers + block tables, no
+            # prefill — the in-graph step does the prompt work
+            plens = true_lens + np.int32(self.prefix_len)
+            self.pool = self._admit_fn(self.params, self.pool, prompts,
+                                       plens, slots, rids, max_news,
+                                       keys, derive, mask, prefix_embeds)
+        else:
+            self.pool = self._admit_fn(self.params, self.pool, prompts,
+                                       true_lens, slots, rids, max_news,
+                                       keys, derive, mask, prefix_embeds,
+                                       frames)
         for i, q in enumerate(batch):
             slot = int(free[i])
             self._busy[slot] = True
@@ -757,14 +1002,28 @@ class DecodeScheduler:
         return engine.resolved_attn_impl(self.cfg, self.kv)
 
     @property
+    def prefill_impl(self) -> str:
+        """PREFILL-attention path admissions actually run
+        (``engine.resolved_prefill_impl``): "dense-bucketed" (one-shot
+        monolithic prefill), "flash-paged:compiled|interpret" (chunked
+        through the block-table kernel), or "xla-chunked" — so
+        interleaved-mode CPU interpret numbers can't be misread as TPU
+        numbers either."""
+        return engine.resolved_prefill_impl(self.cfg, self.kv,
+                                            self.prefill)
+
+    @property
     def busy_slot_steps(self) -> int:
-        """Σ over decode iterations of the active-slot count (device
-        counter, accumulated in-graph)."""
+        """Σ over loop iterations of the active-slot count (device
+        counter, accumulated in-graph; prefill-only iterations add
+        zero)."""
         return int(self.pool.slot_steps)
 
     @property
     def occupancy(self) -> float:
-        """Mean fraction of slots busy over all decode steps so far."""
+        """Mean fraction of slots decoding over all loop iterations
+        so far (chunked mode: prefill-only iterations count as idle
+        decode capacity — the honest denominator)."""
         if self.total_steps == 0:
             return 0.0
         return self.busy_slot_steps / (self.total_steps * self.n_slots)

@@ -8,6 +8,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention.ops import attention_ref, flash_attention
+from repro.kernels.flash_prefill.ops import flash_prefill, \
+    flash_prefill_ref
 from repro.kernels.lstm_cell.ops import lstm_cell, lstm_cell_ref
 from repro.kernels.paged_attention.ops import paged_attention, \
     paged_attention_ref
@@ -137,6 +139,25 @@ class TestPagedAttention:
         for o in outs[1:]:
             np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)
 
+    @pytest.mark.parametrize("B,H,KV,hd,block,bpr", [
+        (3, 16, 1, 32, 4, 5),    # MQA, G=16 -> two 8-row query tiles
+        (2, 32, 2, 16, 8, 3),    # GQA 16:1 over 2 KV heads
+        (2, 24, 2, 16, 4, 4),    # G=12: ragged width keeps one tile
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_wide_gqa_multi_query_tiling(self, B, H, KV, hd, block, bpr,
+                                         dtype):
+        """Wide GQA groups (G > 8) split over the multi-query grid
+        axis; parity must hold across the tile seam."""
+        q, kp, vp, table, cur = _paged_case(B, H, KV, hd, block, bpr,
+                                            dtype, i=3)
+        out = paged_attention(q, kp, vp, table, cur)
+        ref = paged_attention_ref(q, kp, vp, table, cur)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(out.astype(np.float32),
+                                   ref.astype(np.float32),
+                                   rtol=tol, atol=tol)
+
     def test_matches_paged_view_gather_path(self):
         """Kernel vs the serving stack's own XLA gather path: the same
         PagedView, decode_attention with attn_impl pallas vs xla."""
@@ -239,6 +260,112 @@ class TestPagedAttentionEndToEnd:
             np.testing.assert_array_equal(
                 f.tokens, np.asarray(sync.tokens[f.request_id, :f.length]))
         assert sched.free_blocks == sched.kv_blocks
+
+
+def _prefill_case(B, C, H, KV, hd, block, bpr, dtype, i=0):
+    """Random pool + SHUFFLED table + per-row chunk offsets covering
+    the edges: offset 0 (first chunk), a mid-stream offset, and the
+    last chunk of a full row."""
+    n_blocks = B * bpr + 3
+    kp = rand((n_blocks, block, KV, hd), dtype, 60 + i)
+    vp = rand((n_blocks, block, KV, hd), dtype, 70 + i)
+    q = rand((B, C, H, hd), dtype, 80 + i)
+    ids = jax.random.permutation(jax.random.fold_in(KEY, 90 + i), n_blocks)
+    table = ids[:B * bpr].reshape(B, bpr).astype(jnp.int32)
+    T = block * bpr
+    off = jax.random.randint(jax.random.fold_in(KEY, 95 + i), (B,), 0,
+                             max(T - C, 1)).astype(jnp.int32)
+    off = off.at[0].set(0)
+    off = off.at[B - 1].set(T - C)
+    return q, kp, vp, table, off
+
+
+class TestFlashPrefill:
+    @pytest.mark.parametrize("B,C,H,KV,hd,block,bpr", [
+        (3, 4, 4, 4, 32, 4, 5),    # MHA
+        (2, 8, 8, 2, 64, 8, 3),    # GQA 4:1
+        (3, 5, 6, 3, 16, 4, 4),    # GQA 2:1, chunk not a block multiple
+        (2, 1, 2, 1, 16, 16, 2),   # MQA, single-token chunk
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, B, C, H, KV, hd, block, bpr, dtype):
+        q, kp, vp, table, off = _prefill_case(B, C, H, KV, hd, block, bpr,
+                                              dtype)
+        out = flash_prefill(q, kp, vp, table, off)
+        ref = flash_prefill_ref(q, kp, vp, table, off)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(out.astype(np.float32),
+                                   ref.astype(np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_matches_causal_attention_ref(self):
+        """A full prompt written into the pool and prefilled in
+        chunks equals one causal attention_ref pass over the prompt —
+        for chunk sizes 1, the block size, and a non-divisor."""
+        B, S, H, KV, hd, block = 2, 16, 4, 2, 16, 4
+        k = rand((B, S, KV, hd), jnp.float32, 1)
+        v = rand((B, S, KV, hd), jnp.float32, 2)
+        q = rand((B, S, H, hd), jnp.float32, 3)
+        ref = attention_ref(q, k, v, causal=True)
+        bpr = S // block
+        kp = k.reshape(B * bpr, block, KV, hd)
+        vp = v.reshape(B * bpr, block, KV, hd)
+        table = jnp.arange(B * bpr, dtype=jnp.int32).reshape(B, bpr)
+        for C in (1, block, 5):
+            outs = []
+            for off in range(0, S, C):
+                w = min(C, S - off)
+                qc = jnp.zeros((B, C, H, hd)).at[:, :w].set(
+                    q[:, off:off + w])
+                o = flash_prefill(qc, kp, vp, table,
+                                  jnp.full((B,), off, jnp.int32))
+                outs.append(o[:, :w])
+            out = jnp.concatenate(outs, axis=1)
+            np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_unallocated_tail_blocks_match_ref(self):
+        """-1 table entries past the visible window clip to block 0 on
+        both paths; causal masking makes the result identical."""
+        q, kp, vp, table, off = _prefill_case(3, 4, 4, 2, 16, 4, 4,
+                                              jnp.float32, i=1)
+        C = q.shape[1]
+        need = -(-(off + C) // 4)
+        keep = jnp.arange(table.shape[1])[None, :] < need[:, None]
+        table = jnp.where(keep, table, -1)
+        out = flash_prefill(q, kp, vp, table, off)
+        ref = flash_prefill_ref(q, kp, vp, table, off)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_matches_prefill_attention_gather_path(self):
+        """Kernel vs the serving stack's own XLA fallback: the same
+        PagedView, prefill_attention with attn_impl pallas vs xla."""
+        from repro.models import attention as attn_lib
+        from repro.serve import kv_cache as kvc
+
+        n, max_len, KV, hd, H, block, C = 3, 18, 2, 16, 4, 4, 5
+        cache = kvc.PagedKVCache.create(1, n, max_len, KV, hd, jnp.float32,
+                                        block=block)
+        cache = cache.alloc(jnp.arange(n, dtype=jnp.int32),
+                            jnp.full((n,), max_len, jnp.int32))
+        view = cache.view_at(0)
+        k = rand((n, max_len, KV, hd), jnp.float32, 1)
+        v = rand((n, max_len, KV, hd), jnp.float32, 2)
+        view = view.write_prompt(k, v)
+        q = rand((n, C, H, hd), jnp.float32, 3)
+        off = jnp.asarray([0, 7, max_len - C], jnp.int32)
+        xla = attn_lib.prefill_attention(q, view, q_off=off,
+                                         attn_impl="xla")
+        pal = attn_lib.prefill_attention(q, view, q_off=off,
+                                         attn_impl="pallas")
+        np.testing.assert_allclose(pal, xla, rtol=2e-5, atol=2e-5)
+        # a DenseView silently takes the gather path under "pallas"
+        dense = kvc.DenseView(k, v)
+        np.testing.assert_allclose(
+            attn_lib.prefill_attention(q, dense, q_off=off,
+                                       attn_impl="pallas"),
+            attn_lib.prefill_attention(q, dense, q_off=off,
+                                       attn_impl="xla"),
+            rtol=0, atol=0)
 
 
 class TestSelectiveScan:

@@ -1,0 +1,419 @@
+"""Chunked prefill: equivalence with one-shot admission, block-table
+identity, kernel-path static guarantees, and prefill-path reporting.
+
+The acceptance invariant (DESIGN.md §8.2): chunked-prefill greedy
+decode is BIT-IDENTICAL to the one-shot ``DecodeScheduler`` output —
+across chunk sizes (1, the KV block size, a non-divisor of the prompt
+length, and >= the prompt), across families (dense/moe/vlm), and the
+two admissions build byte-identical block tables.
+"""
+
+import dataclasses
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.serve import engine, kv_cache as kvc
+from repro.serve import scheduler as sched_lib
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "dist"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[2] / "benchmarks"))
+from dist_utils import run_ndev  # noqa: E402
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_config("smollm-135m", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    return cfg, params
+
+
+# ------------------- write_chunk (view-level) -------------------------------
+
+@pytest.mark.parametrize("impl", ["dense", "paged"])
+@pytest.mark.parametrize("chunk", [1, 4, 5])
+def test_write_chunk_matches_write_prompt(impl, chunk):
+    """A prompt written in chunks at running offsets lands byte-for-
+    byte where write_prompt lands it — per chunk size (1, the block
+    size, a non-divisor) — and never touches the block table."""
+    n, S, max_len, KV, hd = 3, 14, 20, 2, 8
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (n, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (n, S, KV, hd))
+    caches = {}
+    for mode in ("oneshot", "chunked"):
+        cls = kvc.DenseKVCache if impl == "dense" else kvc.PagedKVCache
+        kwargs = {} if impl == "dense" else {"block": 4}
+        cache = cls.create(1, n, max_len, KV, hd, jnp.float32, **kwargs)
+        if impl == "paged":
+            cache = cache.alloc(jnp.arange(n, dtype=jnp.int32),
+                                jnp.full((n,), max_len, jnp.int32))
+        view = cache.view_at(0)
+        if mode == "oneshot":
+            view = view.write_prompt(k, v)
+        else:
+            for off in range(0, S, chunk):
+                w = min(chunk, S - off)
+                view = view.write_chunk(
+                    k[:, off:off + w], v[:, off:off + w],
+                    jnp.full((n,), off, jnp.int32))
+        caches[mode] = (cache, view)
+    a, b = caches["oneshot"][1], caches["chunked"][1]
+    ka, va = a.gather()
+    kb, vb = b.gather()
+    np.testing.assert_array_equal(np.asarray(ka[:, :S]),
+                                  np.asarray(kb[:, :S]))
+    np.testing.assert_array_equal(np.asarray(va[:, :S]),
+                                  np.asarray(vb[:, :S]))
+    if impl == "paged":
+        np.testing.assert_array_equal(np.asarray(a.table),
+                                      np.asarray(b.table))
+
+
+def test_write_chunk_masked_rows_and_overflow_drop():
+    """Unmasked rows and positions past the buffer/allocation write
+    nothing (the ragged final chunk of a nearly-done row)."""
+    n, max_len = 2, 8
+    for impl in ("dense", "paged"):
+        cls = kvc.DenseKVCache if impl == "dense" else kvc.PagedKVCache
+        kwargs = {} if impl == "dense" else {"block": 4}
+        cache = cls.create(1, n, max_len, 2, 4, jnp.float32, **kwargs)
+        if impl == "paged":
+            cache = cache.alloc(jnp.arange(n, dtype=jnp.int32),
+                                jnp.full((n,), max_len, jnp.int32))
+        view = cache.view_at(0)
+        k = jnp.ones((n, 4, 2, 4))
+        before = view.gather()[0]
+        # row 0 masked off; row 1 writes at offset 6 -> lanes 6,7 only
+        view2 = dataclasses.replace(view, mask=jnp.asarray([False, True]))
+        view2 = view2.write_chunk(k, k, jnp.asarray([0, 6], jnp.int32))
+        ka = np.asarray(view2.gather()[0])
+        np.testing.assert_array_equal(ka[0], np.asarray(before[0]))
+        np.testing.assert_array_equal(ka[1, 6:8], np.ones((2, 2, 4)))
+        np.testing.assert_array_equal(ka[1, :6], np.asarray(before[1, :6]))
+
+
+# ------------------- chunked vs one-shot equivalence ------------------------
+
+@pytest.mark.parametrize("kv", ["dense", "paged"])
+@pytest.mark.parametrize("chunk", [1, 4, 5, 16])
+def test_chunked_equals_oneshot_across_chunk_sizes(smollm, kv, chunk):
+    """Variable-length prompts through the chunked scheduler produce
+    bit-identical greedy tokens to the one-shot scheduler (== the
+    batch-sync reference) for chunk sizes 1, the KV block (4), a
+    non-divisor (5), and >= the longest prompt."""
+    cfg, params = smollm
+    sched = sched_lib.DecodeScheduler(params, cfg, n_slots=2,
+                                      prompt_len=16, max_new_cap=6,
+                                      eos_id=1, kv=kv, kv_block=4,
+                                      prefill="chunked",
+                                      chunk_tokens=chunk)
+    prompts = {}
+    for b, L in enumerate((3, 5, 9, 16, 1)):
+        p = jax.random.randint(jax.random.fold_in(KEY, b), (1, L), 2,
+                               cfg.vocab)
+        prompts[sched.submit(p, max_new=6)] = p
+    finished = sched.run_until_drained()
+    assert len(finished) == len(prompts)
+    for f in finished:
+        ref = engine.generate_batch_sync(params, cfg,
+                                         prompts[f.request_id],
+                                         max_new=6, eos_id=1)
+        np.testing.assert_array_equal(
+            f.tokens, np.asarray(ref.tokens[0, :f.length]))
+    if kv == "paged":
+        assert sched.free_blocks == sched.kv_blocks
+
+
+def test_chunked_bitwise_beyond_attn_k_chunk(smollm):
+    """Prompts LONGER than cfg.attn_k_chunk (16 for smoke configs):
+    one-shot prefill runs chunked_attention's online softmax over
+    16-lane k-blocks there, and the chunked-prefill gather fallback
+    must mirror those exact block boundaries — prefill LOGITS are
+    bitwise equal, not merely argmax-equal, including chunk sizes
+    that straddle k-block boundaries."""
+    cfg, params = smollm
+    assert cfg.attn_k_chunk == 16
+    B, S = 3, 64
+    prompt = jax.random.randint(KEY, (B, S), 2, cfg.vocab)
+    key = engine.kv_key(cfg)
+    cache1 = engine.make_cache(cfg, B, S + 8)
+    cache1[key] = cache1[key].alloc(jnp.arange(B),
+                                    jnp.full((B,), S + 8))
+    ref, _ = engine.prefill(params, cfg, prompt, cache1)
+    for C in (24, 16, 7):
+        cache2 = engine.make_cache(cfg, B, S + 8)
+        cache2[key] = cache2[key].alloc(jnp.arange(B),
+                                        jnp.full((B,), S + 8))
+        got = np.zeros(np.asarray(ref).shape, np.float32)
+        for off in range(0, S, C):
+            w = min(C, S - off)
+            lg, cache2 = engine.prefill_chunk(
+                params, cfg, prompt, cache2,
+                jnp.full((B,), off, jnp.int32), chunk=C,
+                mask=jnp.ones((B,), bool))
+            got[:, off:off + w] = np.asarray(lg[:, :w], np.float32)
+        np.testing.assert_array_equal(got, np.asarray(ref, np.float32))
+
+
+@pytest.mark.parametrize("arch", ["dbrx-132b", "internvl2-1b"])
+def test_chunked_equals_oneshot_moe_vlm(arch):
+    """MoE and VLM families: chunked scheduler output == one-shot
+    scheduler output, token for token (same requests, same order)."""
+    cfg = get_config(arch, smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    B, S, NEW = 3, 8, 6
+    prompt = jax.random.randint(KEY, (B, S), 2, cfg.vocab)
+    kw = {}
+    prefix_len = 0
+    if cfg.family == "vlm":
+        prefix_len = cfg.n_patches
+        kw["prefix_embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+
+    def drive(prefill, chunk=4):
+        sched = sched_lib.DecodeScheduler(
+            params, cfg, n_slots=2, prompt_len=S, max_new_cap=NEW,
+            eos_id=1, kv="paged", kv_block=4, prefix_len=prefix_len,
+            prefill=prefill, chunk_tokens=chunk)
+        for b in range(B):
+            sched.submit(prompt[b:b + 1], max_new=NEW, request_id=b,
+                         prefix_embeds=(kw["prefix_embeds"][b:b + 1]
+                                        if prefix_len else None))
+        return {f.request_id: f.tokens for f in sched.run_until_drained()}
+
+    ref = drive("oneshot")
+    for chunk in (3, 8):     # non-divisor and >= prompt
+        got = drive("chunked", chunk)
+        assert got.keys() == ref.keys()
+        for rid in ref:
+            np.testing.assert_array_equal(got[rid], ref[rid])
+
+
+def test_chunked_pallas_kernel_path_bit_identical(smollm):
+    """attn_impl=pallas + paged: decode through the paged-attention
+    kernel AND prefill through the flash-prefill kernel (interpret on
+    CPU), still bit-identical to the dense one-shot reference."""
+    cfg, params = smollm
+    cfg_k = dataclasses.replace(cfg, attn_impl="pallas")
+    B, S, NEW = 3, 8, 8
+    prompt = jax.random.randint(KEY, (B, S), 2, cfg.vocab)
+    sync = engine.generate_batch_sync(params, cfg, prompt, max_new=NEW,
+                                      eos_id=1)
+    sched = sched_lib.DecodeScheduler(params, cfg_k, n_slots=2,
+                                      prompt_len=S, max_new_cap=NEW,
+                                      eos_id=1, kv="paged", kv_block=4,
+                                      prefill="chunked", chunk_tokens=3)
+    assert sched.prefill_impl.startswith("flash-paged:")
+    assert sched.attn_impl.startswith("pallas-paged:")
+    for b in range(B):
+        sched.submit(prompt[b:b + 1], max_new=NEW, request_id=b)
+    finished = sched.run_until_drained()
+    assert len(finished) == B
+    for f in finished:
+        np.testing.assert_array_equal(
+            f.tokens, np.asarray(sync.tokens[f.request_id, :f.length]))
+    assert sched.free_blocks == sched.kv_blocks
+
+
+# ------------------- block-table identity -----------------------------------
+
+def test_chunked_admission_builds_identical_block_tables(smollm):
+    """Assign-only admission allocates the SAME physical blocks the
+    one-shot admission allocates (same requests, same order): the
+    device block table and owner vector are byte-identical right
+    after admission, and fully freed after drain in both modes."""
+    cfg, params = smollm
+    prompt = jax.random.randint(KEY, (3, 8), 2, cfg.vocab)
+
+    def admitted(prefill):
+        sched = sched_lib.DecodeScheduler(
+            params, cfg, n_slots=2, prompt_len=8, max_new_cap=6,
+            eos_id=1, kv="paged", kv_block=4, prefill=prefill,
+            chunk_tokens=5)
+        for b in range(3):
+            sched.submit(prompt[b:b + 1], max_new=6, request_id=b)
+        sched._admit_queued()
+        node = sched.pool.cache["attn"]
+        return sched, np.asarray(node.table), np.asarray(node.owner)
+
+    s1, t1, o1 = admitted("oneshot")
+    s2, t2, o2 = admitted("chunked")
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(o1, o2)
+    assert t1.max() >= 0          # something was actually allocated
+    for s in (s1, s2):
+        s.run_until_drained()
+        node = s.pool.cache["attn"]
+        assert (np.asarray(node.table) == -1).all()
+        assert (np.asarray(node.owner) == -1).all()
+
+
+def test_chunked_tight_pool_head_of_line(smollm):
+    """Chunked admission under a tight block pool: block-gated FIFO
+    admission, recycled blocks, bit-identical completion."""
+    cfg, params = smollm
+    B, S, NEW = 4, 8, 8
+    prompt = jax.random.randint(KEY, (B, S), 2, cfg.vocab)
+    sync = engine.generate_batch_sync(params, cfg, prompt, max_new=NEW,
+                                      eos_id=1)
+    # max_len = 8+8+1 = 17 -> 5 blocks/request at block=4; pool of 10
+    # holds TWO resident requests though there are 4 slots.
+    sched = sched_lib.DecodeScheduler(params, cfg, n_slots=4, prompt_len=S,
+                                      max_new_cap=NEW, eos_id=1,
+                                      kv="paged", kv_block=4, kv_blocks=10,
+                                      prefill="chunked", chunk_tokens=4)
+    for b in range(B):
+        sched.submit(prompt[b:b + 1], max_new=NEW)
+    sched._admit_queued()
+    assert sched.active_count == 2          # block-gated, not slot-gated
+    assert len(sched.queue) == 2
+    assert sched.free_blocks == 0
+    finished = sched.run_until_drained()
+    assert len(finished) == B
+    for f in finished:
+        np.testing.assert_array_equal(
+            f.tokens, np.asarray(sync.tokens[f.request_id, :f.length]))
+    assert sched.free_blocks == sched.kv_blocks
+
+
+# ------------------- engine-level: audio chunk mode -------------------------
+
+def test_audio_prefill_chunk_matches_oneshot_logits():
+    """The encdec chunk path: with a primed cross cache, chunked
+    prefill reproduces the one-shot prefill logits at every real
+    position (the scheduler gates audio out of chunked mode, but the
+    engine path is exact and tested)."""
+    cfg = get_config("whisper-small", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    B, S = 2, 8
+    tokens = jax.random.randint(KEY, (B, S), 2, cfg.vocab)
+    frames = jax.random.normal(KEY, (B, cfg.n_frames, cfg.d_model),
+                               jnp.bfloat16)
+    max_len = S + 5
+    cache = engine.make_cache(cfg, B, max_len)
+    ref_logits, ref_cache = engine.prefill(params, cfg, tokens, cache,
+                                           frames=frames)
+    cache2 = engine.make_cache(cfg, B, max_len)
+    cache2 = {"self": cache2["self"], "cross": ref_cache["cross"]}
+    got = np.zeros(np.asarray(ref_logits).shape, np.float32)
+    C = 3
+    for off in range(0, S, C):
+        logits, cache2 = engine.prefill_chunk(
+            params, cfg, tokens, cache2,
+            jnp.full((B,), off, jnp.int32), chunk=C,
+            mask=jnp.ones((B,), bool))
+        w = min(C, S - off)
+        got[:, off:off + w] = np.asarray(logits[:, :w], np.float32)
+    np.testing.assert_allclose(got, np.asarray(ref_logits, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    # self-attention K/V lanes agree with what one-shot wrote
+    ks, _ = cache2["self"].view_at(0).gather()
+    kr, _ = ref_cache["self"].view_at(0).gather()
+    np.testing.assert_allclose(np.asarray(ks[:, :S], np.float32),
+                               np.asarray(kr[:, :S], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ------------------- static jaxpr guarantee ---------------------------------
+
+def test_flash_prefill_path_has_zero_dense_kv_intermediates():
+    """PR-4's static assert, extended to the prefill path: the chunk
+    step under attn_impl=pallas + paged cache allocates NO dense
+    ``(rows, >= max_len, KV, hd)`` K/V intermediate; the XLA gather
+    fallback allocates several (detector sanity)."""
+    from bench_chunked_prefill import check_static_prefill
+    out = check_static_prefill()
+    assert out["pallas"][0] == 0
+    assert out["xla"][0] > 0
+
+
+# ------------------- prefill-path reporting ---------------------------------
+
+def test_prefill_impl_reporting(smollm):
+    """resolved_prefill_impl / GenerateResult.prefill_impl /
+    DecodeScheduler.prefill_impl name the path that actually ran —
+    ":interpret" off TPU, so CPU numbers can't pose as TPU numbers."""
+    cfg, params = smollm
+    cfg_k = dataclasses.replace(cfg, attn_impl="pallas")
+    assert engine.resolved_prefill_impl(cfg, "paged") == "dense-bucketed"
+    assert engine.resolved_prefill_impl(cfg, "paged", "chunked") == \
+        "xla-chunked"
+    assert engine.resolved_prefill_impl(cfg_k, "paged", "chunked") in (
+        "flash-paged:interpret", "flash-paged:compiled")
+    assert engine.resolved_prefill_impl(
+        get_config("falcon-mamba-7b", smoke=True), "dense") == \
+        "attention-free"
+    res = engine.generate_batch_sync(
+        params, cfg, jnp.zeros((1, 4), jnp.int32), max_new=2, eos_id=1)
+    assert res.prefill_impl == "dense-bucketed"
+    sched = sched_lib.DecodeScheduler(params, cfg_k, n_slots=1,
+                                      prompt_len=4, max_new_cap=2,
+                                      kv="paged", prefill="chunked")
+    assert sched.prefill_impl.startswith("flash-paged:")
+
+
+def test_chunked_rejected_for_recurrent_families():
+    cfg = get_config("falcon-mamba-7b", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    with pytest.raises(ValueError, match="chunked"):
+        sched_lib.DecodeScheduler(params, cfg, n_slots=1, prompt_len=8,
+                                  max_new_cap=4, prefill="chunked")
+    with pytest.raises(ValueError, match="attention-family"):
+        engine.prefill_chunk(params, cfg, jnp.zeros((1, 8), jnp.int32),
+                             {}, jnp.zeros((1,), jnp.int32), chunk=4)
+
+
+# ------------------- sharded slot pool (SPMD) -------------------------------
+
+def test_chunked_sharded_pool_8dev():
+    """The chunked-mode pool (prompt buffers + progress registers in
+    the while_loop carry) shards over the data mesh axes and stays
+    bit-identical to the unsharded batch-synchronous reference."""
+    run_ndev("""
+        from jax.sharding import Mesh
+        import numpy as onp
+        from repro.configs import get_config
+        from repro.dist import sharding as sh
+        from repro.models import model_zoo
+        from repro.serve import engine
+        from repro.serve import scheduler as sched_lib
+
+        cfg = get_config("smollm-135m", smoke=True)
+        params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+        mesh = Mesh(onp.asarray(jax.devices()[:4]).reshape(4), ("data",))
+        rules = sh.resolve_rules(mesh, d_model=cfg.d_model,
+                                 n_heads=cfg.n_heads,
+                                 n_kv_heads=cfg.n_kv_heads,
+                                 d_ff=cfg.d_ff, vocab=cfg.padded_vocab)
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (6, 8), 2,
+                                    cfg.vocab)
+        sync = engine.generate_batch_sync(params, cfg, prompt, max_new=6,
+                                          eos_id=1)
+        for kv in ("dense", "paged"):
+            with mesh:
+                sched = sched_lib.DecodeScheduler(
+                    params, cfg, n_slots=4, prompt_len=8, max_new_cap=6,
+                    eos_id=1, rules=rules, mesh=mesh, kv=kv, kv_block=4,
+                    prefill="chunked", chunk_tokens=3)
+                assert "data" in str(sched.pool.prompt.sharding.spec), \
+                    sched.pool.prompt.sharding
+                for b in range(6):
+                    sched.submit(prompt[b:b + 1], max_new=6)
+                fin = sched.run_until_drained()
+            assert len(fin) == 6
+            for f in fin:
+                onp.testing.assert_array_equal(
+                    f.tokens,
+                    onp.asarray(sync.tokens[f.request_id, :f.length]))
+            if kv == "paged":
+                assert sched.free_blocks == sched.kv_blocks
+            print("chunked sharded pool OK", kv)
+    """, n_devices=8)

@@ -21,7 +21,8 @@ def main() -> None:
     from . import (bench_chunked_prefill, bench_dqn, bench_loop_overhead,
                    bench_loop_scaling, bench_memory_swap,
                    bench_model_parallel, bench_paged_attention,
-                   bench_paged_kv, bench_parallel_iterations, bench_serving,
+                   bench_paged_kv, bench_parallel_iterations,
+                   bench_prefix_cache, bench_serving,
                    bench_static_vs_dynamic, roofline_report)
 
     suites = [
@@ -36,6 +37,7 @@ def main() -> None:
         ("PagedKV", bench_paged_kv),
         ("PagedAttn", bench_paged_attention),
         ("ChunkedPrefill", bench_chunked_prefill),
+        ("PrefixCache", bench_prefix_cache),
         ("Roofline", roofline_report),
     ]
     ap = argparse.ArgumentParser()

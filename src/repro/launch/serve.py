@@ -30,6 +30,15 @@ inter-token latency for running slots stays flat while long prompts
 stream in (``benchmarks/bench_chunked_prefill.py`` measures the
 bound). The report line also names the prefill path that ran
 (``flash-paged:*`` vs ``dense-bucketed``).
+
+``--prefix-cache`` (with ``--prefill chunked --kv paged``) adds
+content-addressed prefix caching (DESIGN.md §8.3): a hot prompt
+prefills ONCE — later identical prompts map the cached blocks into
+their own tables (refcounted, copy-on-write) and start prefilling at
+their first uncached block. Pair with ``--prompt-pool P`` to generate
+the repeated-prompt traffic it serves
+(``benchmarks/bench_prefix_cache.py`` measures admission-to-first-
+token and capacity at equal pool bytes).
 """
 
 import argparse
@@ -80,11 +89,17 @@ def run_continuous(args, cfg, params, workload):
         params, cfg, n_slots=args.slots, prompt_len=args.prompt_len,
         max_new_cap=cap, eos_id=args.eos_id, sampling=sp, seed=args.seed,
         kv=args.kv, kv_block=args.kv_block, kv_blocks=args.kv_blocks,
-        prefill=args.prefill, chunk_tokens=args.chunk_tokens)
+        prefill=args.prefill, chunk_tokens=args.chunk_tokens,
+        prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(args.seed)
-    prompts = {i: rng.integers(2, cfg.vocab,
-                               (1, args.prompt_len)).astype(np.int32)
-               for i in range(len(workload))}
+    # --prompt-pool P draws the workload's prompts from P distinct
+    # prompts (default: all distinct) — hot repeated prompts are the
+    # traffic --prefix-cache exists for
+    pool_n = args.prompt_pool or len(workload)
+    pool = [rng.integers(2, cfg.vocab,
+                         (1, args.prompt_len)).astype(np.int32)
+            for _ in range(pool_n)]
+    prompts = {i: pool[i % pool_n] for i in range(len(workload))}
     # Warm compiles outside the timed window (prefill + both step modes).
     sched.warmup()
 
@@ -120,7 +135,9 @@ def run_continuous(args, cfg, params, workload):
             "p50_s": pctl(lat, 50), "p99_s": pctl(lat, 99),
             "occupancy": sched.occupancy, "steps": sched.total_steps,
             "tokens": toks, "attn_impl": sched.attn_impl,
-            "prefill_impl": sched.prefill_impl}
+            "prefill_impl": sched.prefill_impl,
+            "prefix_hit_blocks": sched.prefix_hit_blocks,
+            "prefix_evictions": sched.prefix_evictions}
 
 
 def run_batch_sync(args, cfg, params, workload):
@@ -213,6 +230,17 @@ def main():
                     help="chunked-prefill chunk size (smaller = tighter "
                          "inter-token latency bound, more prefill "
                          "iterations per prompt)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed prefix caching (requires "
+                         "--prefill chunked --kv paged): a repeated "
+                         "prompt's full blocks are MAPPED into the new "
+                         "row's table (copy-on-write shared, refcounted) "
+                         "and its prefill starts at the first uncached "
+                         "block; greedy outputs stay bit-identical")
+    ap.add_argument("--prompt-pool", type=int, default=0,
+                    help="draw the workload's prompts from this many "
+                         "distinct prompts (0 = all distinct); the "
+                         "repeated-prompt traffic --prefix-cache serves")
     ap.add_argument("--compare", action="store_true",
                     help="also run the batch-synchronous baseline")
     args = ap.parse_args()
@@ -233,6 +261,10 @@ def main():
           f"p99 {cont['p99_s'] * 1e3:.0f}ms | "
           f"occupancy {cont['occupancy'] * 100:.0f}% "
           f"({cont['steps']} device steps)")
+    if args.prefix_cache:
+        print(f"[serve] prefix cache: {cont['prefix_hit_blocks']} "
+              f"blocks served from cache, "
+              f"{cont['prefix_evictions']} evictions")
     if args.compare:
         sync = run_batch_sync(args, cfg, params, workload)
         print(f"[serve] batch-sync ({sync['attn_impl']}; offline, no "

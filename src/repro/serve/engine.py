@@ -199,7 +199,13 @@ def _decode_positions(cur_len):
 def _decode_attn_families(params, cfg, rules, x, cache, cur_len,
                           write_mask=None):
     positions = _decode_positions(cur_len)
-    node = cache["attn"]
+    # Copy-on-write BEFORE the layer scan: the append at cur_len - 1
+    # must never land in a block other references still read (prefix
+    # sharing). Table/refcount are cross-layer state, so this runs once
+    # per step, not per layer; a no-op for dense and unshared pools.
+    node = cache["attn"].ensure_private(
+        start=jnp.asarray(cur_len, jnp.int32) - 1, width=1,
+        mask=write_mask)
 
     def f(carry, xs):
         x = carry
@@ -229,7 +235,8 @@ def _decode_hybrid(params, cfg, rules, x, cache, cur_len):
     k = cfg.shared_attn_every
     L = cfg.n_layers
     positions = _decode_positions(cur_len)
-    node = cache["attn"]
+    node = cache["attn"].ensure_private(
+        start=jnp.asarray(cur_len, jnp.int32) - 1, width=1)
     new_ssm = cache["ssm"]
     for app, start in enumerate(range(0, L, k)):
         x, new_view, _ = transformer.attn_block(
@@ -256,7 +263,8 @@ def _decode_hybrid(params, cfg, rules, x, cache, cur_len):
 
 
 def _decode_audio(params, cfg, rules, x, cache, cur_len):
-    node = cache["self"]
+    node = cache["self"].ensure_private(
+        start=jnp.asarray(cur_len, jnp.int32) - 1, width=1)
 
     def f(carry, xs):
         x = carry
@@ -340,7 +348,9 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
     positions = jnp.arange(S)[None]
 
     if fam in ("dense", "moe", "vlm"):
-        node = cache["attn"]
+        # CoW before the prompt write sweep (no-op unless shared)
+        node = cache["attn"].ensure_private(rows, start=0, width=S,
+                                            mask=mask)
 
         def f(carry, xs):
             x = carry
@@ -364,7 +374,8 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
     elif fam == "hybrid":
         k = cfg.shared_attn_every
         L = cfg.n_layers
-        node = cache["attn"]
+        node = cache["attn"].ensure_private(rows, start=0, width=S,
+                                            mask=mask)
         new_ssm = cache["ssm"]
         for app, start in enumerate(range(0, L, k)):
             x, new_view, _ = transformer.attn_block(
@@ -391,7 +402,8 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
         enc_out = encdec.encode(params, cfg, frames, rules)
         cross = encdec.cross_kv(params, cfg, enc_out)
         x = x + layers.sinusoidal_positions(S, cfg.d_model, cdt)
-        node = cache["self"]
+        node = cache["self"].ensure_private(rows, start=0, width=S,
+                                            mask=mask)
 
         def f(carry, xs):
             x = carry
@@ -464,7 +476,12 @@ def prefill_chunk(params, cfg: ModelConfig, prompts: jax.Array, cache: Any,
     x = sh.constrain(x, rules, (sh.BATCH, None, None))
 
     if fam in ("dense", "moe", "vlm"):
-        node = cache["attn"]
+        # CoW before the chunk write: a prefix-cache row's first
+        # uncached chunk must not scribble over a shared block (the
+        # scheduler's block-aligned sharing cap makes this a no-op in
+        # practice; it is the safety invariant)
+        node = cache["attn"].ensure_private(start=offsets, width=C,
+                                            mask=mask)
 
         def f(carry, xs):
             x = carry
@@ -477,7 +494,8 @@ def prefill_chunk(params, cfg: ModelConfig, prompts: jax.Array, cache: Any,
         new_cache = {"attn": node.with_layers(new_leaves)}
     else:   # audio: cross cache must already be primed (written once
             # per request at its fixed n_frames width)
-        node = cache["self"]
+        node = cache["self"].ensure_private(start=offsets, width=C,
+                                            mask=mask)
 
         def f(carry, xs):
             x = carry

@@ -12,11 +12,17 @@ protocol with two implementations (DESIGN.md §8):
   ``n_rows × max_len`` regardless of occupancy.
 - ``PagedKVCache`` — vLLM-style block tables: fixed-size blocks in a
   shared pool ``(L, n_blocks, block, KV, hd)``, a per-row block table
-  ``(n_rows, blocks_per_row)`` and an in-graph free-list (the ``owner``
-  vector). ``alloc``/``free`` are pure array ops, so admission and
-  retirement stay inside the runtime: a retired slot's blocks are
-  reusable by the very next admission, and pool capacity is bounded by
-  *tokens in flight*, not ``n_rows × max_len``.
+  ``(n_rows, blocks_per_row)`` and an in-graph free-list (the
+  ``refcount`` vector — a block is free iff ``refcount == 0``).
+  ``alloc``/``free`` are pure array ops, so admission and retirement
+  stay inside the runtime: a retired slot's blocks are reusable by the
+  very next admission, and pool capacity is bounded by *tokens in
+  flight*, not ``n_rows × max_len``. Blocks are **reference-counted**:
+  ``alloc`` can map already-populated physical blocks into a new row's
+  table (prefix caching — a shared system prompt's K/V prefills once),
+  ``free`` decrements instead of unconditionally releasing, and
+  ``ensure_private`` performs in-graph copy-on-write before a row
+  writes into a block some other reference still reads.
 
 Both are registered pytrees, so a cache rides through ``jax.jit`` /
 ``repro.core.while_loop`` carries unchanged (the scheduler's
@@ -167,8 +173,14 @@ class DenseView:
         return dataclasses.replace(self, k=kc, v=vc)
 
     def gather(self) -> Tuple[jax.Array, jax.Array]:
-        """Dense ``(n, T, KV, hd)`` K and V (identity for this impl)."""
-        return self.k, self.v
+        """Dense ``(n, T, KV, hd)`` K and V, the bound ``rows``
+        applied: view row ``i`` of the result is cache row
+        ``rows[i]`` — the same binding semantics ``paged_state()``
+        exposes, so the gather fallback and the kernel path read the
+        same rows whatever the binding (identity when unbound)."""
+        if self.rows is None:
+            return self.k, self.v
+        return self.k[self.rows], self.v[self.rows]
 
     def paged_state(self):
         """Gather-free kernel operands; None — this layout IS dense."""
@@ -289,11 +301,16 @@ class PagedView:
         materializes this layout — engaged by
         ``models.attention.decode_attention`` when
         ``cfg.attn_impl == "pallas"``.
+
+        The bound ``rows`` is applied exactly as in ``paged_state()``
+        (view row ``i`` reads cache row ``rows[i]``), so the two read
+        paths can never disagree about which row's blocks they walk.
         """
-        safe = jnp.clip(self.table, 0)
+        table = self.table if self.rows is None else self.table[self.rows]
+        safe = jnp.clip(table, 0)
         kg = self.k_pool[safe]            # (n, bpr, block, KV, hd)
         vg = self.v_pool[safe]
-        n, bpr = self.table.shape
+        n, bpr = table.shape
         kg = kg.reshape((n, bpr * self.block) + kg.shape[3:])
         vg = vg.reshape((n, bpr * self.block) + vg.shape[3:])
         return kg[:, :self.max_len], vg[:, :self.max_len]
@@ -351,9 +368,17 @@ class KVCache:
 
     # ---- issue-protocol conveniences over the view machinery ----
     def append(self, layer: int, rows, cur_len, k, v) -> "KVCache":
-        """Append one token's K/V for ``rows`` at ``cur_len - 1``."""
-        return self.set_at(layer,
-                           self.view_at(layer, rows=rows).append(k, v,
+        """Append one token's K/V for ``rows`` at ``cur_len - 1``.
+        Copy-on-write first: an append into a block other references
+        still read repoints this row to a private copy (paged only;
+        the engine's scan paths call ``ensure_private`` themselves,
+        once per step rather than per layer)."""
+        node = self.ensure_private(rows,
+                                   start=jnp.asarray(cur_len,
+                                                     jnp.int32) - 1,
+                                   width=1)
+        return node.set_at(layer,
+                           node.view_at(layer, rows=rows).append(k, v,
                                                                  cur_len))
 
     def gather(self, layer: int, rows=None):
@@ -364,13 +389,30 @@ class KVCache:
         return k[rows], v[rows]
 
     # ---- lifecycle ----
-    def alloc(self, rows, budget, mask=None) -> "KVCache":
+    def alloc(self, rows, budget, mask=None, shared=None,
+              pin=None) -> "KVCache":
         """Reserve capacity for ``budget[i]`` tokens on row ``rows[i]``
-        (masked rows only). Dense: no-op (capacity is preallocated)."""
+        (masked rows only). Dense: no-op (capacity is preallocated).
+
+        ``shared`` (optional, paged): ``(n, blocks_per_row)`` physical
+        block ids to MAP into each row's leading table columns instead
+        of allocating fresh blocks (``-1``-padded, prefix-contiguous) —
+        the prefix-cache hit path. ``pin`` (optional): same-shape bool;
+        pinned columns take one EXTRA reference (a host-side index
+        registration that outlives the row)."""
         return self
 
     def free(self, rows=None, mask=None) -> "KVCache":
         """Release rows' capacity back to the pool. Dense: no-op."""
+        return self
+
+    def ensure_private(self, rows=None, *, start, width,
+                       mask=None) -> "KVCache":
+        """Guarantee the blocks backing positions
+        ``[start, start + width)`` of ``rows`` are exclusively held
+        (``refcount == 1``) before a write lands there — in-graph
+        copy-on-write for the paged cache. Dense: no-op (rows never
+        share storage)."""
         return self
 
     # ---- placement ----
@@ -434,21 +476,26 @@ class DenseKVCache(KVCache):
 class PagedKVCache(KVCache):
     """Block-table cache: shared pool + per-row tables + free-list.
 
-    ``owner[b]`` is the row id holding physical block ``b`` (``-1`` =
-    free) — the free-list as a flat vector, so ``alloc``/``free`` are
-    in-graph scatters and the whole lifecycle stays inside jit /
-    ``while_loop`` bodies.
+    ``refcount[b]`` counts the references holding physical block ``b``:
+    table occurrences across rows plus host-index pins. A block is free
+    iff ``refcount[b] == 0`` — the free-list as a flat vector, so
+    ``alloc``/``free`` are in-graph scatters and the whole lifecycle
+    stays inside jit / ``while_loop`` bodies. ``owner[b]`` records the
+    row that *allocated* (and therefore writes) the block, ``-1`` when
+    free — shared mappings never change it, so a block's writer stays
+    unambiguous while readers come and go.
     """
 
     k_pool: jax.Array        # (L, n_blocks, block, KV, hd)
     v_pool: jax.Array
     table: jax.Array         # (n_rows, blocks_per_row) int32, -1 = unalloc
     owner: jax.Array         # (n_blocks,) int32, -1 = free
+    refcount: jax.Array = None   # (n_blocks,) int32, 0 = free
     max_len: int = 0         # logical per-row width (static)
 
     def tree_flatten(self):
-        return (self.k_pool, self.v_pool, self.table, self.owner), \
-            (self.max_len,)
+        return (self.k_pool, self.v_pool, self.table, self.owner,
+                self.refcount), (self.max_len,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -467,14 +514,15 @@ class PagedKVCache(KVCache):
         pshape = (n_layers, nb, block, kv_heads, head_dim)
         if abstract:
             e = jax.ShapeDtypeStruct(pshape, dtype)
+            vec = jax.ShapeDtypeStruct((nb,), jnp.int32)
             return cls(k_pool=e, v_pool=e,
                        table=jax.ShapeDtypeStruct((n_rows, bpr), jnp.int32),
-                       owner=jax.ShapeDtypeStruct((nb,), jnp.int32),
-                       max_len=max_len)
+                       owner=vec, refcount=vec, max_len=max_len)
         return cls(k_pool=jnp.zeros(pshape, dtype),
                    v_pool=jnp.zeros(pshape, dtype),
                    table=jnp.full((n_rows, bpr), -1, jnp.int32),
                    owner=jnp.full((nb,), -1, jnp.int32),
+                   refcount=jnp.zeros((nb,), jnp.int32),
                    max_len=max_len)
 
     @property
@@ -495,7 +543,7 @@ class PagedKVCache(KVCache):
 
     @property
     def free_count(self) -> jax.Array:
-        return jnp.sum(self.owner < 0).astype(jnp.int32)
+        return jnp.sum(self.refcount == 0).astype(jnp.int32)
 
     @property
     def layers(self):
@@ -511,60 +559,220 @@ class PagedKVCache(KVCache):
 
     # ---- lifecycle (pure array ops; run inside jit / while bodies) ----
 
-    def alloc(self, rows, budget, mask=None) -> "PagedKVCache":
-        """Assign ``ceil(budget / block)`` free blocks to each masked
-        row. Rows must be free (``free`` first — admission does). The
-        caller is responsible for capacity: requests whose blocks don't
-        fit must not be admitted (the scheduler's host mirror enforces
-        this); on overflow the table records ``-1`` (writes drop,
-        gathers read block 0 garbage) rather than corrupting live rows.
+    def alloc(self, rows, budget, mask=None, shared=None,
+              pin=None) -> "PagedKVCache":
+        """Assign ``ceil(budget / block)`` blocks to each masked row.
+        Rows must be free (``free`` first — admission does).
+
+        ``shared`` (optional) maps already-populated physical blocks
+        into each row's LEADING table columns: ``shared[i]`` is a
+        prefix-contiguous run of block ids (``-1``-padded) whose
+        refcounts are bumped instead of drawing from the free-list —
+        the prefix-cache hit path. Only ``need - n_shared`` fresh
+        blocks are allocated. ``pin[i, j]`` adds one extra reference
+        to the block mapped at column ``j`` (a host-index registration
+        that must survive this row's retirement).
+
+        Allocation is **all-or-nothing per row**: a row whose fresh
+        blocks don't all fit the free-list allocates nothing (its table
+        stays fully ``-1`` and it maps no shared blocks), and the rows
+        after it still allocate if their own needs fit — a failed row
+        reserves nothing. The caller is responsible for capacity
+        (the scheduler's host mirror gates admission), so failure is a
+        defensive state, not a scheduling mechanism: writes on a failed
+        row drop and its gathers read block-0 garbage behind the
+        length mask, never corrupting live rows.
         """
         rows = jnp.asarray(rows, jnp.int32)
         n = rows.shape[0]
         mask = jnp.ones((n,), bool) if mask is None else mask
         need = blocks_needed(jnp.asarray(budget, jnp.int32), self.block)
         need = jnp.where(mask, need, 0)
+        bpr = self.blocks_per_row
+        j = jnp.arange(bpr, dtype=jnp.int32)[None, :]
+        if shared is None:
+            shared = jnp.full((n, bpr), -1, jnp.int32)
+        else:
+            shared = jnp.asarray(shared, jnp.int32)
+        if pin is None:
+            pin = jnp.zeros((n, bpr), bool)
+        n_sh = jnp.sum((shared >= 0) & (j < need[:, None]),
+                       axis=1).astype(jnp.int32)
+        n_sh = jnp.where(mask, n_sh, 0)
+        fresh_need = need - n_sh
         # Free block ids in index order, free-first (stable).
-        is_free = self.owner < 0
+        is_free = self.refcount == 0
         free_ids = jnp.argsort(jnp.where(is_free, 0, 1),
                                stable=True).astype(jnp.int32)
         n_free = jnp.sum(is_free).astype(jnp.int32)
-        starts = jnp.cumsum(need) - need                  # exclusive scan
-        j = jnp.arange(self.blocks_per_row, dtype=jnp.int32)[None, :]
-        want = starts[:, None] + j                        # (n, bpr)
-        valid = mask[:, None] & (j < need[:, None]) & (want < n_free)
+
+        # Sequential first-fit: row i succeeds iff its fresh blocks fit
+        # after the rows admitted before it; failed rows reserve nothing.
+        def fit(acc, fn):
+            ok = acc + fn <= n_free
+            return acc + jnp.where(ok, fn, 0), (ok, acc)
+
+        _, (row_ok, starts) = jax.lax.scan(fit, jnp.int32(0), fresh_need)
+        row_ok = row_ok & mask
+        col_fresh = j - n_sh[:, None]                     # (n, bpr)
+        is_shared = row_ok[:, None] & (j < n_sh[:, None])
+        is_fresh = row_ok[:, None] & (col_fresh >= 0) & (j < need[:, None])
+        want = starts[:, None] + col_fresh
         phys = free_ids[jnp.clip(want, 0, self.n_blocks - 1)]
-        new_rows = jnp.where(valid, phys, -1)
+        new_rows = jnp.where(is_shared, shared,
+                             jnp.where(is_fresh, phys, -1))
         table = self.table.at[rows].set(
             jnp.where(mask[:, None], new_rows, self.table[rows]))
+        # refcount: +1 per mapped entry (shared or fresh), +1 extra per
+        # pinned column
+        inc = jnp.where(new_rows >= 0,
+                        1 + (pin & (new_rows >= 0)).astype(jnp.int32), 0)
+        refcount = self.refcount.at[
+            jnp.where(new_rows >= 0, new_rows, self.n_blocks).reshape(-1)
+        ].add(inc.reshape(-1), mode="drop")
+        # owner records the ALLOCATING row — fresh blocks only; mapping
+        # a shared block never re-attributes its writer
         owner = self.owner.at[
-            jnp.where(valid, phys, self.n_blocks).reshape(-1)].set(
-            jnp.broadcast_to(rows[:, None], valid.shape).reshape(-1),
+            jnp.where(is_fresh, phys, self.n_blocks).reshape(-1)].set(
+            jnp.broadcast_to(rows[:, None], is_fresh.shape).reshape(-1),
             mode="drop")
-        return dataclasses.replace(self, table=table, owner=owner)
+        return dataclasses.replace(self, table=table, owner=owner,
+                                   refcount=refcount)
 
     def free(self, rows=None, mask=None) -> "PagedKVCache":
-        """Return masked rows' blocks to the free-list (in-graph: the
-        scheduler calls this at retirement, inside the decode loop)."""
+        """Drop masked rows' table references (in-graph: the scheduler
+        calls this at retirement, inside the decode loop). Each block
+        loses one reference per table occurrence in a freed row; it
+        returns to the free-list only when the count reaches zero —
+        blocks still mapped by other rows, or pinned by the host
+        prefix index, survive. Idempotent: a row whose table was
+        already cleared decrements nothing."""
         n = self.n_rows
         rows = _bcast_rows(rows, n)
         mask = jnp.ones((rows.shape[0],), bool) if mask is None else mask
         row_freed = jnp.zeros((n,), bool).at[rows].set(mask, mode="drop")
-        freed = (self.owner >= 0) & row_freed[jnp.clip(self.owner, 0)]
-        owner = jnp.where(freed, -1, self.owner)
+        ids = jnp.where(row_freed[:, None] & (self.table >= 0),
+                        self.table, self.n_blocks)
+        dec = jnp.zeros((self.n_blocks,), jnp.int32).at[
+            ids.reshape(-1)].add(1, mode="drop")
+        refcount = jnp.maximum(self.refcount - dec, 0)
+        owner = jnp.where(refcount == 0, -1, self.owner)
         table = jnp.where(row_freed[:, None], -1, self.table)
-        return dataclasses.replace(self, table=table, owner=owner)
+        return dataclasses.replace(self, table=table, owner=owner,
+                                   refcount=refcount)
+
+    def release(self, block_ids) -> "PagedKVCache":
+        """Drop ONE reference from each listed physical block (``-1``
+        entries ignored) — the host prefix index evicting its pins.
+        A block whose count reaches zero returns to the free-list."""
+        ids = jnp.asarray(block_ids, jnp.int32)
+        safe = jnp.where(ids >= 0, ids, self.n_blocks)
+        dec = jnp.zeros((self.n_blocks,), jnp.int32).at[safe].add(
+            1, mode="drop")
+        refcount = jnp.maximum(self.refcount - dec, 0)
+        owner = jnp.where(refcount == 0, -1, self.owner)
+        return dataclasses.replace(self, owner=owner, refcount=refcount)
+
+    def ensure_private(self, rows=None, *, start, width,
+                       mask=None) -> "PagedKVCache":
+        """In-graph copy-on-write: before ``rows`` write positions
+        ``[start, start + width)``, any covered block with
+        ``refcount > 1`` is copied (every layer) to a fresh block and
+        this row's table entry repointed — other references keep
+        reading the original bits. ``width`` is static; ``start`` is a
+        scalar or per-row vector. The common no-sharing case pays one
+        table/refcount lookup and a predicate — the copy lives behind
+        a ``lax.cond``.
+
+        A block's OWNER writes in place: extra references on an owned
+        block (the prefix index's pin, placed at alloc) are claims on
+        the content the owner is still producing — copying the owner
+        away would leave the pinned block permanently half-written.
+        Only non-owner rows (sharers that mapped the block later) get
+        copied; the prefix index never serves a block to a sharer
+        until the owner has finished writing it (READY discipline).
+
+        On the serving path even sharer-CoW never actually fires: the
+        scheduler caps sharing at full blocks strictly before the
+        write frontier, so every write lands in a freshly-allocated
+        block. It is the safety invariant that makes sharing
+        composable with ANY caller of the write API (and the property
+        tests drive it directly). If the pool is dry mid-copy the
+        row's entry becomes ``-1`` — its colliding write drops; the
+        shared bits stay intact for the other readers.
+        """
+        rows = _bcast_rows(rows, self.n_rows)
+        n = rows.shape[0]
+        mask = jnp.ones((n,), bool) if mask is None else mask
+        start = jnp.asarray(start, jnp.int32)
+        if start.ndim == 0:
+            start = jnp.full((n,), start, jnp.int32)
+        bpr = self.blocks_per_row
+        # static candidate window: [start, start+width) spans at most
+        # (width - 1) // block + 2 table columns
+        span = (int(width) - 1) // self.block + 2
+        cols = (start // self.block)[:, None] \
+            + jnp.arange(span, dtype=jnp.int32)[None, :]   # (n, span)
+        covered = (cols * self.block < (start + int(width))[:, None]) \
+            & (cols < bpr)
+        valid = mask[:, None] & covered
+        blk = self.table[rows[:, None], jnp.clip(cols, 0, bpr - 1)]
+        safe_blk = jnp.clip(blk, 0)
+        needs = valid & (blk >= 0) \
+            & (self.refcount[safe_blk] > 1) \
+            & (self.owner[safe_blk] != rows[:, None])
+
+        def do_cow(cache):
+            is_free = cache.refcount == 0
+            free_ids = jnp.argsort(jnp.where(is_free, 0, 1),
+                                   stable=True).astype(jnp.int32)
+            n_free = jnp.sum(is_free).astype(jnp.int32)
+            flat = needs.reshape(-1)
+            order = jnp.cumsum(flat.astype(jnp.int32)) - 1
+            ok = flat & (order < n_free)
+            fresh = jnp.where(
+                ok, free_ids[jnp.clip(order, 0, cache.n_blocks - 1)],
+                cache.n_blocks)
+            old = blk.reshape(-1)
+            old_safe = jnp.clip(old, 0, cache.n_blocks - 1)
+            k_pool = cache.k_pool.at[:, fresh].set(
+                cache.k_pool[:, old_safe], mode="drop")
+            v_pool = cache.v_pool.at[:, fresh].set(
+                cache.v_pool[:, old_safe], mode="drop")
+            # repoint the row's entry (fresh copy, or -1 when the pool
+            # is dry); the old block loses this row's reference either
+            # way
+            rix = jnp.where(needs, rows[:, None], cache.n_rows)
+            table = cache.table.at[
+                rix.reshape(-1),
+                jnp.clip(cols, 0, bpr - 1).reshape(-1)].set(
+                jnp.where(ok, fresh, -1), mode="drop")
+            dec = jnp.zeros((cache.n_blocks,), jnp.int32).at[
+                jnp.where(flat, old_safe, cache.n_blocks)].add(
+                1, mode="drop")
+            refcount = jnp.maximum(cache.refcount - dec, 0)
+            refcount = refcount.at[fresh].set(1, mode="drop")
+            owner = jnp.where(refcount == 0, -1, cache.owner)
+            owner = owner.at[fresh].set(
+                jnp.broadcast_to(rows[:, None], needs.shape).reshape(-1),
+                mode="drop")
+            return dataclasses.replace(cache, k_pool=k_pool,
+                                       v_pool=v_pool, table=table,
+                                       owner=owner, refcount=refcount)
+
+        return jax.lax.cond(jnp.any(needs), do_cow, lambda c: c, self)
 
     def shardings(self, rules, mesh=None, row_axis: str = sh.BATCH):
         pool = rules.sharding(
             (sh.LAYERS, sh.BLOCK, None, sh.CACHE_KV, sh.CACHE_HD), mesh,
             dims=tuple(self.k_pool.shape))
+        vec = rules.sharding((sh.BLOCK,), mesh,
+                             dims=tuple(self.owner.shape))
         return PagedKVCache(
             k_pool=pool, v_pool=pool,
             table=rules.sharding((row_axis, None), mesh,
                                  dims=tuple(self.table.shape)),
-            owner=rules.sharding((sh.BLOCK,), mesh,
-                                 dims=tuple(self.owner.shape)),
+            owner=vec, refcount=vec,
             max_len=self.max_len)
 
 

@@ -39,12 +39,27 @@ class SamplingParams:
 
 def sample(logits: jax.Array, key, sp: SamplingParams) -> jax.Array:
     """Sample token ids from ``logits (..., V)`` -> ``(...)`` int32."""
+    if sp.top_k > logits.shape[-1]:
+        raise ValueError(
+            f"top_k={sp.top_k} exceeds the vocab size "
+            f"{logits.shape[-1]}; top_k must be in [0, vocab]")
     if sp.greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     scaled = logits.astype(jnp.float32) / sp.temperature
     if sp.top_k > 0:
+        # Keep EXACTLY top_k candidates. Masking `scaled < kth` alone
+        # keeps every logit TIED with the k-th value (common with bf16
+        # logits, where distinct activations round to equal values), so
+        # ties are broken by index — the same lowest-index-first rule
+        # lax.top_k itself uses: all strictly-greater entries survive,
+        # plus the first (k - #greater) ties in index order.
         kth = jax.lax.top_k(scaled, sp.top_k)[0][..., -1:]
-        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        gt = scaled > kth
+        n_gt = jnp.sum(gt, axis=-1, keepdims=True)
+        tie = scaled == kth
+        tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=-1)
+        keep = gt | (tie & (tie_rank <= sp.top_k - n_gt))
+        scaled = jnp.where(keep, scaled, -jnp.inf)
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
@@ -55,6 +70,10 @@ def sample_slots(logits: jax.Array, keys: jax.Array,
     Each slot uses its own request-derived key, so a request's stream
     is independent of slot placement.
     """
+    if sp.top_k > logits.shape[-1]:
+        raise ValueError(
+            f"top_k={sp.top_k} exceeds the vocab size "
+            f"{logits.shape[-1]}; top_k must be in [0, vocab]")
     if sp.greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.vmap(lambda l, k: sample(l, k, sp))(logits, keys)

@@ -100,7 +100,9 @@ training batch uses.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 from typing import Any, List, Optional
 
 import jax
@@ -182,6 +184,118 @@ class _Queued:
     key: Any                 # (2,) uint32 or None (derive from rid)
     prefix_embeds: Any = None
     frames: Any = None
+
+
+# =========================== prefix index ===================================
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    """One cached full prompt block. ``block_id`` is the physical pool
+    block (filled from the device table right after the registering
+    admission); ``ready`` flips once the registering slot has finished
+    prefilling it (only READY entries are matchable — a half-written
+    block must never be shared); ``row_refs`` counts resident rows
+    referencing the entry (the registering row included), so eviction
+    can't pull a block out from under a live table."""
+
+    block_id: int = -1
+    ready: bool = False
+    row_refs: int = 0
+
+
+class _PrefixIndex:
+    """Host-side content-addressed index over READY prompt blocks.
+
+    Keys are **chain hashes**: block ``i``'s key digests block
+    ``i-1``'s key plus block ``i``'s token ids (VLM streams seed the
+    chain with a digest of the request's patch embeds), so a key
+    match proves the ENTIRE prefix up to and including that block is
+    identical — matching is a per-block dict probe, not a token
+    comparison. Hashes are computed host-side at admission: the token
+    ids are already on the host (they arrived in ``submit``), the
+    index is host state anyway (the device has no dict), and hashing
+    ~plen/block small byte strings is noise next to a prefill — doing
+    it in-graph would buy nothing and cost a device round-trip per
+    probe. Entries are kept in LRU order (an :class:`OrderedDict`);
+    eviction picks the least-recently-used READY entry with no
+    resident references.
+    """
+
+    def __init__(self, block: int):
+        self.block = int(block)
+        self.entries: "collections.OrderedDict[bytes, _PrefixEntry]" = \
+            collections.OrderedDict()
+
+    @staticmethod
+    def seed(prefix_embeds) -> bytes:
+        """Chain seed for a request: VLM patch embeds digest (distinct
+        images diverge at block 0), empty otherwise."""
+        if prefix_embeds is None:
+            return b""
+        return hashlib.blake2b(np.ascontiguousarray(
+            np.asarray(prefix_embeds)).tobytes(),
+            digest_size=16).digest()
+
+    def hashes(self, tokens: np.ndarray, prefix_len: int,
+               seed: bytes) -> List[bytes]:
+        """Chain hash of every FULL stream block of a prompt (stream =
+        ``prefix_len`` patch positions then the tokens)."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        plen = prefix_len + len(tokens)
+        h = hashlib.blake2b(seed, digest_size=16).digest()
+        out = []
+        for jb in range(plen // self.block):
+            lo = max(0, jb * self.block - prefix_len)
+            hi = (jb + 1) * self.block - prefix_len
+            seg = tokens[lo:hi] if hi > 0 else tokens[:0]
+            h = hashlib.blake2b(h + seg.tobytes(),
+                                digest_size=16).digest()
+            out.append(h)
+        return out
+
+    def lookup(self, hs: List[bytes], cap: int, dead=frozenset()):
+        """Longest READY prefix run of ``hs``, at most ``cap`` blocks
+        (pure: no LRU/ref mutation — admission planning must be able
+        to back out). ``dead`` holds keys already planned for eviction
+        this round: their pins are released before alloc runs, so
+        mapping them would race the fresh-block allocator. Returns
+        (keys, block_ids)."""
+        keys: List[bytes] = []
+        ids: List[int] = []
+        for h in hs[:cap]:
+            e = self.entries.get(h)
+            if e is None or not e.ready or e.block_id < 0 or h in dead:
+                break
+            keys.append(h)
+            ids.append(e.block_id)
+        return keys, ids
+
+    def pick_victim(self, reserved) -> Optional[bytes]:
+        """LRU READY entry with no resident references (and not
+        reserved by the admission round being planned)."""
+        for h, e in self.entries.items():
+            if h in reserved or not e.ready or e.row_refs > 0 \
+                    or e.block_id < 0:
+                continue
+            return h
+        return None
+
+    def evict(self, h: bytes) -> int:
+        """Drop an entry; returns its block id (whose pin the device
+        releases in the same admission call)."""
+        return self.entries.pop(h).block_id
+
+    def register(self, h: bytes) -> _PrefixEntry:
+        """Add a PENDING entry owned by the registering row."""
+        e = _PrefixEntry(row_refs=1)
+        self.entries[h] = e
+        return e
+
+    def touch(self, h: bytes) -> None:
+        self.entries.move_to_end(h)
+
+    def __len__(self) -> int:
+        return len(self.entries)
 
 
 # =========================== shardings ======================================
@@ -283,7 +397,8 @@ class DecodeScheduler:
                  rules=None, mesh=None, prefix_len: int = 0, seed: int = 0,
                  admit_threshold: int = 1, kv: str = "dense",
                  kv_block: int = 16, kv_blocks: Optional[int] = None,
-                 prefill: str = "oneshot", chunk_tokens: int = 16):
+                 prefill: str = "oneshot", chunk_tokens: int = 16,
+                 prefix_cache: bool = False):
         if n_slots < 1 or max_new_cap < 1:
             raise ValueError("need n_slots >= 1 and max_new_cap >= 1")
         if not 1 <= admit_threshold <= n_slots:
@@ -301,6 +416,13 @@ class DecodeScheduler:
                     f"prefills through a full-prompt forward")
             if chunk_tokens < 1:
                 raise ValueError("chunk_tokens must be >= 1")
+        if prefix_cache and (prefill != "chunked" or kv != "paged"):
+            raise ValueError(
+                "prefix_cache=True requires prefill='chunked' (a hit "
+                "starts prefilling at its first uncached block, which "
+                "only the chunked path's per-row offsets support) and "
+                "kv='paged' (sharing is a block-table mapping); got "
+                f"prefill={prefill!r}, kv={kv!r}")
         if prefix_len and (cfg.family != "vlm"
                            or prefix_len != cfg.n_patches):
             # The in-graph admission derives the patch prefix from
@@ -354,9 +476,23 @@ class DecodeScheduler:
         self._busy = np.zeros(n_slots, bool)
         self._slot_blocks = np.zeros(n_slots, np.int64)
         self._free_blocks = self.kv_blocks
+        # prefix cache: host-side content-addressed index + per-slot
+        # bookkeeping of matched (hit) and registered entry keys
+        self.prefix_cache = bool(prefix_cache)
+        self._prefix_index = (_PrefixIndex(kv_block) if prefix_cache
+                              else None)
+        self._slot_hits: List[List[bytes]] = [[] for _ in range(n_slots)]
+        self._slot_regs: List[List[bytes]] = [[] for _ in range(n_slots)]
+        self.prefix_hit_blocks = 0    # Σ blocks mapped instead of prefilled
+        self.prefix_evictions = 0
         # driver stats (busy_slot_steps lives in-graph: pool.slot_steps)
         self.total_steps = 0          # loop iterations across segments
         self.tokens_emitted = 0
+        self.peak_resident = 0        # max co-resident requests, sampled
+        #                               post-admission (a whole admitted
+        #                               batch can retire within one
+        #                               segment, so post-harvest
+        #                               active_count misses it)
 
         self.pool = self._init_pool()
         # chunked admission runs NO model forward: assign registers +
@@ -510,7 +646,8 @@ class DecodeScheduler:
         base_key = self._base_key
 
         def assign(params, pool: SlotPool, prompts, plens, slots, rids,
-                   max_news, keys, derive, mask, prefix) -> SlotPool:
+                   max_news, keys, derive, mask, prefix, shared, pin,
+                   pf0, evict) -> SlotPool:
             """Assign up to n requests into free slots.
 
             prompts (n, prompt_len) right-padded token buffers; plens
@@ -519,6 +656,15 @@ class DecodeScheduler:
             ``_admit``; prefix (n, prefix_len, d) patch embeds or
             None. ``params`` is unused (signature kept parallel to
             ``_admit`` so the host driver is mode-agnostic).
+
+            Prefix-cache extras (None / zeros when disabled): shared
+            (n, bpr) physical block ids to MAP into each row's leading
+            table columns (a hit's cached prefix), pin (n, bpr) bool
+            columns taking an extra index-pin reference, pf0 (n,)
+            initial prefill offsets (a hit starts at its first
+            uncached block), evict (kv_blocks,) block ids whose index
+            pins are released THIS call, before allocating — one
+            device dispatch covers evict + free + alloc.
             """
             del params
             cache = pool.cache
@@ -526,8 +672,12 @@ class DecodeScheduler:
             # freed slot's previous blocks, reserve this request's own
             # budget. The blocks are reserved BEFORE any prefill runs,
             # so chunk writes always have somewhere to land.
-            node = cache[kv_key].free(slots, mask=mask)
-            node = node.alloc(slots, plens + max_news + 1, mask=mask)
+            node = cache[kv_key]
+            if evict is not None:
+                node = node.release(evict)
+            node = node.free(slots, mask=mask)
+            node = node.alloc(slots, plens + max_news + 1, mask=mask,
+                              shared=shared, pin=pin)
             cache = {**cache, kv_key: node}
             rkeys = jnp.where(
                 derive[:, None],
@@ -552,7 +702,7 @@ class DecodeScheduler:
                 out=sreg(pool.out, jnp.zeros_like(pool.out)),
                 prompt=sreg(pool.prompt, prompts),
                 plen=sreg(pool.plen, plens),
-                pf_pos=sreg(pool.pf_pos, jnp.zeros((n,), jnp.int32)),
+                pf_pos=sreg(pool.pf_pos, pf0),
                 prefilling=sreg(pool.prefilling, jnp.ones((n,), bool)),
                 prefix=(pool.prefix if prefix is None
                         else sreg(pool.prefix, prefix)))
@@ -719,12 +869,14 @@ class DecodeScheduler:
                                     self.cfg.d_model), cdt)
                          if self.prefix_len > 0 else None)
         if self.prefill == "chunked":
+            shared, pin, evict = self._no_prefix_args()
             pool = self._admit_fn(
                 self.params, self.pool, np.zeros((n, L), np.int32),
                 np.full(n, L + self.prefix_len, np.int32),
                 np.arange(n, dtype=np.int32), np.full(n, -1, np.int32),
                 np.zeros(n, np.int32), np.zeros((n, 2), np.uint32),
-                np.zeros(n, bool), np.zeros(n, bool), prefix_embeds)
+                np.zeros(n, bool), np.zeros(n, bool), prefix_embeds,
+                shared, pin, np.zeros(n, np.int32), evict)
         else:
             frames = (jnp.zeros((n, self.cfg.n_frames, self.cfg.d_model),
                                 cdt)
@@ -757,6 +909,18 @@ class DecodeScheduler:
         # reserves `true_len + prefix + max_new + 1` token positions.
         return int(kvc.blocks_needed(
             true_len + self.prefix_len + max_new + 1, self.kv_block))
+
+    def _no_prefix_args(self):
+        """(shared, pin, evict) admission extras with nothing shared,
+        nothing pinned, nothing evicted — None when the prefix cache
+        is off (the jitted assign then skips those paths entirely)."""
+        if not self.prefix_cache:
+            return None, None, None
+        n = self.n_slots
+        bpr = int(kvc.blocks_needed(self.max_len, self.kv_block))
+        return (np.full((n, bpr), -1, np.int32),
+                np.zeros((n, bpr), bool),
+                np.full(self.kv_blocks, -1, np.int32))
 
     @property
     def active_count(self) -> int:
@@ -836,6 +1000,27 @@ class DecodeScheduler:
             b <<= 1
         return min(b, self.prompt_len)
 
+    def _refresh_ready(self) -> None:
+        """Flip PENDING index entries READY for slots that have left
+        prefill (reads ``pool.prefilling`` — one device sync, paid only
+        when some busy slot still has pending registrations)."""
+        if not self.prefix_cache:
+            return
+        idx = self._prefix_index
+        pend = [s for s in range(self.n_slots)
+                if self._busy[s] and any(
+                    h in idx.entries and not idx.entries[h].ready
+                    for h in self._slot_regs[s])]
+        if not pend:
+            return
+        prefilling = np.asarray(self.pool.prefilling)
+        for s in pend:
+            if not prefilling[s]:
+                for h in self._slot_regs[s]:
+                    e = idx.entries.get(h)
+                    if e is not None:
+                        e.ready = True
+
     def _admit_queued(self) -> int:
         """Fill free slots from the queue in ONE batched prefill.
 
@@ -850,14 +1035,49 @@ class DecodeScheduler:
         """
         if not self.queue or self.free_slots == 0:
             return 0
+        self._refresh_ready()
+        # ---- planning pass: PURE index reads (lookup / pick_victim
+        # mutate nothing), so coalescing or head-of-line blocking can
+        # abandon the whole plan without unwinding anything.
+        idx = self._prefix_index
         batch: List[_Queued] = []
+        plans: List[Optional[dict]] = []
+        victims: List[bytes] = []        # keys planned for eviction
+        reserved: set = set()            # keys this round must not evict
         blocks_free = self._free_blocks
         while self.queue and len(batch) < self.free_slots:
             q = self.queue[0]
             need = self.blocks_for(q.prompt.shape[1], q.max_new)
+            plan = None
+            if self.prefix_cache:
+                plen = self.prefix_len + q.prompt.shape[1]
+                hs = idx.hashes(q.prompt[0], self.prefix_len,
+                                idx.seed(q.prefix_embeds))
+                # Sharing cap: at least one stream position must
+                # prefill in-row (it produces the first token's
+                # logits), and — since writes start at the first
+                # uncached position — every written block is fresh,
+                # so the scheduler path never triggers CoW.
+                hit_keys, hit_ids = idx.lookup(
+                    hs, (plen - 1) // self.kv_block, set(victims))
+                need -= len(hit_keys)
+                # evict LRU unreferenced entries until the fresh
+                # blocks fit (each frees exactly one pinned block)
+                while need > blocks_free:
+                    v = idx.pick_victim(reserved | set(hit_keys))
+                    if v is None:
+                        break
+                    victims.append(v)
+                    reserved.add(v)
+                    blocks_free += 1
+                plan = {"hs": hs, "hit_keys": hit_keys,
+                        "hit_ids": hit_ids}
             if need > blocks_free:
                 break
             blocks_free -= need
+            if plan is not None:
+                reserved.update(plan["hit_keys"])
+            plans.append(plan)
             batch.append(self.queue.pop(0))
         k = len(batch)
         if k == 0:
@@ -911,9 +1131,52 @@ class DecodeScheduler:
             # assign-only admission: registers + block tables, no
             # prefill — the in-graph step does the prompt work
             plens = true_lens + np.int32(self.prefix_len)
+            shared, pin, evict = self._no_prefix_args()
+            pf0 = np.zeros(n, np.int32)
+            regs: List[List[tuple]] = [[] for _ in range(k)]
+            if self.prefix_cache:
+                # ---- commit pass: the plan is final, mutate the index
+                for j, key_ in enumerate(victims):
+                    evict[j] = idx.evict(key_)
+                self._free_blocks += len(victims)
+                self.prefix_evictions += len(victims)
+                for i, plan in enumerate(plans):
+                    hit_keys, hit_ids = plan["hit_keys"], plan["hit_ids"]
+                    for h in hit_keys:
+                        idx.entries[h].row_refs += 1
+                        idx.touch(h)
+                    shared[i, :len(hit_ids)] = hit_ids
+                    pf0[i] = len(hit_ids) * self.kv_block
+                    self.prefix_hit_blocks += len(hit_ids)
+                    # register every full prompt block past the hit run
+                    # (pin takes a +1 index reference at alloc; the
+                    # entry turns READY once this slot leaves prefill)
+                    for c in range(len(hit_keys), len(plan["hs"])):
+                        h = plan["hs"][c]
+                        if h in idx.entries:
+                            continue   # in-flight twin registered it
+                        idx.register(h)
+                        pin[i, c] = True
+                        regs[i].append((h, c))
             self.pool = self._admit_fn(self.params, self.pool, prompts,
                                        plens, slots, rids, max_news,
-                                       keys, derive, mask, prefix_embeds)
+                                       keys, derive, mask, prefix_embeds,
+                                       shared, pin, pf0, evict)
+            if self.prefix_cache and any(regs):
+                # fill registered entries' physical ids from the device
+                # table (one sync per admission that registers blocks)
+                tbl = np.asarray(self.pool.cache[self._kv_key].table)
+                for i in range(k):
+                    slot = int(free[i])
+                    kept = []
+                    for h, c in regs[i]:
+                        bid = int(tbl[slot, c])
+                        if bid >= 0:
+                            idx.entries[h].block_id = bid
+                            kept.append((h, c))
+                        else:       # defensive: row alloc failed
+                            idx.entries.pop(h, None)
+                    regs[i] = kept
         else:
             self.pool = self._admit_fn(self.params, self.pool, prompts,
                                        true_lens, slots, rids, max_news,
@@ -923,7 +1186,15 @@ class DecodeScheduler:
             slot = int(free[i])
             self._busy[slot] = True
             need = self.blocks_for(q.prompt.shape[1], q.max_new)
-            self._slot_blocks[slot] = need
+            if self.prefix_cache and chunked:
+                need -= len(plans[i]["hit_keys"])     # fresh blocks only
+                self._slot_hits[slot] = list(plans[i]["hit_keys"])
+                self._slot_regs[slot] = [h for h, _ in regs[i]]
+                # registered blocks stay pinned by the index after this
+                # slot retires; only the rest return at harvest
+                self._slot_blocks[slot] = need - len(regs[i])
+            else:
+                self._slot_blocks[slot] = need
             self._free_blocks -= need
         return k
 
@@ -948,6 +1219,22 @@ class DecodeScheduler:
             # host mirror learns at harvest, before the next admission
             self._free_blocks += int(self._slot_blocks[slot])
             self._slot_blocks[slot] = 0
+            if self.prefix_cache:
+                # a done slot finished its prefill long ago: its
+                # registrations are READY, and it no longer references
+                # any entry (its table rows were freed in-graph)
+                idx = self._prefix_index
+                for h in self._slot_regs[slot]:
+                    e = idx.entries.get(h)
+                    if e is not None:
+                        e.ready = True
+                        e.row_refs -= 1
+                for h in self._slot_hits[slot]:
+                    e = idx.entries.get(h)
+                    if e is not None:
+                        e.row_refs -= 1
+                self._slot_regs[slot] = []
+                self._slot_hits[slot] = []
         # `done` is cleared in-graph at the next segment's entry (the
         # host has harvested by construction), so no dispatch here.
         # Results are RETURNED, not archived: a long-running server
@@ -967,6 +1254,7 @@ class DecodeScheduler:
         request arriving mid-drain isn't stuck behind the whole tail.
         """
         self._admit_queued()
+        self.peak_resident = max(self.peak_resident, self.active_count)
         if self.active_count == 0:
             return []
         if not self.queue and not expect_arrivals:

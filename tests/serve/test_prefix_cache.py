@@ -1,0 +1,476 @@
+"""Prefix caching with copy-on-write block sharing (DESIGN.md §8.3).
+
+Acceptance invariant: greedy decode with the prefix cache enabled is
+BIT-IDENTICAL to the cache disabled — both on a COLD admission (no
+index entries yet) and on a WARM hit (blocks mapped, prefill starting
+at the first uncached block) — across dense/MoE/VLM families through
+the scheduler with queueing. Plus the refcount lifecycle units, the
+all-or-nothing alloc boundary, and the gather rows-binding
+regression. The hypothesis sweeps over the same invariants live in
+``test_prefix_cache_property.py`` (optional dep).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.serve import engine, kv_cache as kvc
+from repro.serve import scheduler as sched_lib
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _mk(n_rows=4, max_len=12, block=4, n_blocks=None, L=2, KV=2, hd=8):
+    return kvc.PagedKVCache.create(L, n_rows, max_len, KV, hd,
+                                   jnp.float32, block=block,
+                                   n_blocks=n_blocks)
+
+
+def _refcounts_from_state(c):
+    """Expected refcount of every block: table occurrences (pins are
+    asserted separately by callers that placed them)."""
+    table = np.asarray(c.table)
+    rc = np.zeros(c.n_blocks, np.int64)
+    for b in table.reshape(-1):
+        if b >= 0:
+            rc[b] += 1
+    return rc
+
+
+# ------------------- refcount lifecycle (cache level) -----------------------
+
+def test_alloc_free_refcount_lifecycle():
+    c = _mk(n_rows=2, max_len=8, block=4, n_blocks=4)
+    rows = jnp.arange(2, dtype=jnp.int32)
+    c = c.alloc(rows, jnp.asarray([8, 4], jnp.int32))
+    rc = np.asarray(c.refcount)
+    np.testing.assert_array_equal(rc, _refcounts_from_state(c))
+    assert int(c.free_count) == 1
+    c = c.free(mask=jnp.asarray([True, False]))
+    rc = np.asarray(c.refcount)
+    np.testing.assert_array_equal(rc, _refcounts_from_state(c))
+    assert int(c.free_count) == 3
+    # freed blocks dropped their owner
+    owner = np.asarray(c.owner)
+    assert (owner[rc == 0] == -1).all()
+
+
+def test_shared_alloc_maps_blocks_and_counts_references():
+    """A row admitted with `shared` maps existing physical blocks into
+    its leading table columns: refcount goes up, content is the SAME
+    storage (no copy), fresh blocks fill the remainder."""
+    c = _mk(n_rows=3, max_len=16, block=4, n_blocks=8)
+    r0 = jnp.asarray([0], jnp.int32)
+    c = c.alloc(r0, jnp.asarray([16], jnp.int32))
+    donor = np.asarray(c.table)[0]            # 4 blocks
+    k = jax.random.normal(KEY, (1, 16, 2, 8))
+    c = c.set_at(0, c.view_at(0, rows=r0).write_prompt(k, k))
+    bpr = c.blocks_per_row
+    shared = np.full((1, bpr), -1, np.int32)
+    shared[0, :2] = donor[:2]
+    c2 = c.alloc(jnp.asarray([1], jnp.int32),
+                 jnp.asarray([16], jnp.int32),
+                 shared=jnp.asarray(shared))
+    t1 = np.asarray(c2.table)[1]
+    assert t1[0] == donor[0] and t1[1] == donor[1]
+    assert (t1 >= 0).all()
+    rc = np.asarray(c2.refcount)
+    assert rc[donor[0]] == 2 and rc[donor[1]] == 2
+    np.testing.assert_array_equal(rc, _refcounts_from_state(c2))
+    # shared lanes read the donor's bits through the mapping
+    kg, _ = c2.view_at(0).gather()
+    np.testing.assert_array_equal(np.asarray(kg)[1, :8],
+                                  np.asarray(k)[0, :8])
+    # owner of shared blocks is unchanged (still the donor row)
+    owner = np.asarray(c2.owner)
+    assert owner[donor[0]] == 0 and owner[donor[1]] == 0
+
+
+def test_pin_survives_row_free_until_release():
+    """An index pin (+1 at alloc) keeps a block resident after every
+    table reference is gone; `release` drops the pin and frees it."""
+    c = _mk(n_rows=1, max_len=8, block=4, n_blocks=4)
+    bpr = c.blocks_per_row
+    pin = np.zeros((1, bpr), bool)
+    pin[0, 0] = True
+    c = c.alloc(jnp.asarray([0], jnp.int32), jnp.asarray([8], jnp.int32),
+                pin=jnp.asarray(pin))
+    b0 = int(np.asarray(c.table)[0, 0])
+    assert int(np.asarray(c.refcount)[b0]) == 2       # table + pin
+    c = c.free(jnp.asarray([0], jnp.int32))
+    rc = np.asarray(c.refcount)
+    assert rc[b0] == 1                                 # pin holds
+    assert int(c.free_count) == c.n_blocks - 1
+    c = c.release(jnp.asarray([b0], jnp.int32))
+    rc = np.asarray(c.refcount)
+    assert rc[b0] == 0
+    assert int(np.asarray(c.owner)[b0]) == -1
+    assert int(c.free_count) == c.n_blocks
+
+
+# ------------------- all-or-nothing alloc (satellite fix) -------------------
+
+def test_alloc_all_or_nothing_at_exhaustion():
+    """A row that doesn't fully fit reserves NOTHING (pre-fix it kept
+    a partial block run), and a later smaller row still succeeds."""
+    c = _mk(n_rows=3, max_len=12, block=4, n_blocks=4)
+    rows = jnp.arange(3, dtype=jnp.int32)
+    # needs 3, 2, 1 blocks against 4 free: row1 must fail whole
+    c = c.alloc(rows, jnp.asarray([12, 8, 4], jnp.int32))
+    table = np.asarray(c.table)
+    assert (table[0] >= 0).sum() == 3
+    assert (table[1] == -1).all()            # all-or-nothing
+    assert (table[2] >= 0).sum() == 1
+    np.testing.assert_array_equal(np.asarray(c.refcount),
+                                  _refcounts_from_state(c))
+    assert int(c.free_count) == 0
+
+
+def test_alloc_failed_row_counts_shared_but_maps_nothing():
+    """All-or-nothing covers shared mappings too: a failed row maps
+    no shared blocks (their refcounts stay put)."""
+    c = _mk(n_rows=2, max_len=16, block=4, n_blocks=5)
+    c = c.alloc(jnp.asarray([0], jnp.int32), jnp.asarray([16], jnp.int32))
+    donor = np.asarray(c.table)[0]
+    bpr = c.blocks_per_row
+    shared = np.full((1, bpr), -1, np.int32)
+    shared[0, :2] = donor[:2]
+    # row 1 needs 4 blocks, 2 shared + 2 fresh, but only 1 is free
+    c2 = c.alloc(jnp.asarray([1], jnp.int32),
+                 jnp.asarray([16], jnp.int32),
+                 shared=jnp.asarray(shared))
+    assert (np.asarray(c2.table)[1] == -1).all()
+    np.testing.assert_array_equal(np.asarray(c2.refcount),
+                                  np.asarray(c.refcount))
+
+
+# ------------------- copy-on-write ------------------------------------------
+
+def test_cow_sharer_write_copies_owner_write_lands_in_place():
+    """ensure_private: a NON-owner row touching a shared block gets a
+    private copy (other readers keep the original bits); the OWNER
+    writes in place — its extra references (the index pin) are claims
+    on the content the owner is still producing."""
+    c = _mk(n_rows=2, max_len=8, block=4, n_blocks=6)
+    bpr = c.blocks_per_row
+    pin = np.zeros((1, bpr), bool)
+    pin[0, 0] = True
+    c = c.alloc(jnp.asarray([0], jnp.int32), jnp.asarray([8], jnp.int32),
+                pin=jnp.asarray(pin))
+    k = jax.random.normal(KEY, (1, 8, 2, 8))
+    c = c.set_at(0, c.view_at(0, rows=jnp.asarray([0])).write_prompt(k, k))
+    donor = np.asarray(c.table)[0]
+    # owner row 0 writes into its pinned (refcount 2) block: NO copy
+    c_own = c.ensure_private(jnp.asarray([0], jnp.int32), start=0, width=4)
+    np.testing.assert_array_equal(np.asarray(c_own.table),
+                                  np.asarray(c.table))
+    # map block 0 into row 1 and write there: row 1 must be copied
+    shared = np.full((1, bpr), -1, np.int32)
+    shared[0, 0] = donor[0]
+    c = c.alloc(jnp.asarray([1], jnp.int32), jnp.asarray([8], jnp.int32),
+                shared=jnp.asarray(shared))
+    assert int(np.asarray(c.refcount)[donor[0]]) == 3
+    c2 = c.ensure_private(jnp.asarray([1], jnp.int32), start=0, width=4)
+    t1 = np.asarray(c2.table)[1]
+    assert t1[0] != donor[0]                       # repointed to a copy
+    assert int(np.asarray(c2.refcount)[donor[0]]) == 2
+    assert int(np.asarray(c2.refcount)[t1[0]]) == 1
+    assert int(np.asarray(c2.owner)[t1[0]]) == 1
+    # the copy carries the shared bits; the original is untouched
+    kg, _ = c2.view_at(0).gather()
+    np.testing.assert_array_equal(np.asarray(kg)[1, :4],
+                                  np.asarray(k)[0, :4])
+    kg0, _ = c2.view_at(0, rows=jnp.asarray([0])).gather()
+    np.testing.assert_array_equal(np.asarray(kg0)[0, :8],
+                                  np.asarray(k)[0])
+    expect = _refcounts_from_state(c2)
+    expect[donor[0]] += 1                          # the index pin
+    np.testing.assert_array_equal(np.asarray(c2.refcount), expect)
+
+
+def test_cow_pool_dry_drops_write_keeps_shared_bits():
+    """If no free block exists mid-copy, the sharer's entry becomes
+    -1 (its colliding write drops); the shared block stays intact."""
+    c = _mk(n_rows=2, max_len=4, block=4, n_blocks=2)
+    c = c.alloc(jnp.asarray([0], jnp.int32), jnp.asarray([4], jnp.int32))
+    donor = int(np.asarray(c.table)[0, 0])
+    k = jax.random.normal(KEY, (1, 4, 2, 8))
+    c = c.set_at(0, c.view_at(0, rows=jnp.asarray([0])).write_prompt(k, k))
+    bpr = c.blocks_per_row
+    shared = np.full((1, bpr), -1, np.int32)
+    shared[0, 0] = donor
+    c = c.alloc(jnp.asarray([1], jnp.int32), jnp.asarray([0], jnp.int32),
+                shared=jnp.asarray(shared))
+    # occupy the one remaining block so the copy finds no free target
+    c = dataclasses.replace(
+        c, refcount=c.refcount.at[1 - donor].set(
+            jnp.maximum(c.refcount[1 - donor], 1)))
+    c2 = c.ensure_private(jnp.asarray([1], jnp.int32), start=0, width=4)
+    assert int(np.asarray(c2.table)[1, 0]) == -1
+    assert int(np.asarray(c2.refcount)[donor]) == 1
+    kg, _ = c2.view_at(0, rows=jnp.asarray([0])).gather()
+    np.testing.assert_array_equal(np.asarray(kg)[0], np.asarray(k)[0])
+
+
+def test_cow_under_jit_and_masked_rows():
+    """ensure_private composes with jit; masked rows don't copy."""
+    c = _mk(n_rows=2, max_len=8, block=4, n_blocks=6)
+    c = c.alloc(jnp.arange(2, dtype=jnp.int32),
+                jnp.asarray([8, 0], jnp.int32))
+    donor = np.asarray(c.table)[0]
+    bpr = c.blocks_per_row
+    shared = np.full((1, bpr), -1, np.int32)
+    shared[0, 0] = donor[0]
+    c = c.alloc(jnp.asarray([1], jnp.int32), jnp.asarray([8], jnp.int32),
+                shared=jnp.asarray(shared))
+
+    @jax.jit
+    def f(cache, mask):
+        return cache.ensure_private(jnp.arange(2, dtype=jnp.int32),
+                                    start=0, width=4, mask=mask)
+
+    c_no = f(c, jnp.asarray([False, False]))
+    np.testing.assert_array_equal(np.asarray(c_no.table),
+                                  np.asarray(c.table))
+    c_yes = f(c, jnp.asarray([False, True]))
+    assert int(np.asarray(c_yes.table)[1, 0]) != donor[0]
+    np.testing.assert_array_equal(np.asarray(c_yes.refcount),
+                                  _refcounts_from_state(c_yes))
+
+
+# ------------------- gather rows-binding regression (satellite fix) ---------
+
+@pytest.mark.parametrize("impl", ["dense", "paged"])
+def test_gather_honors_bound_rows(impl):
+    """`gather()` must apply the bound `rows` exactly as
+    `paged_state()` does (pre-fix, gather returned ALL rows in cache
+    order — the fallback read path and the kernel path disagreed
+    whenever admission shuffled slots)."""
+    n, T = 4, 8
+    if impl == "dense":
+        c = kvc.DenseKVCache.create(1, n, T, 2, 8, jnp.float32)
+    else:
+        c = _mk(n_rows=n, max_len=T, block=4, n_blocks=2 * n)
+        c = c.alloc(jnp.arange(n, dtype=jnp.int32),
+                    jnp.full((n,), T, jnp.int32))
+    k = jax.random.normal(KEY, (n, T, 2, 8))
+    c = c.set_at(0, c.view_at(0).write_prompt(k, k))
+    perm = jnp.asarray([2, 0, 3, 1], jnp.int32)
+    v = c.view_at(0, rows=perm)
+    kg, vg = v.gather()
+    np.testing.assert_array_equal(np.asarray(kg),
+                                  np.asarray(k)[np.asarray(perm)])
+    if impl == "paged":
+        _, _, table = v.paged_state()
+        np.testing.assert_array_equal(
+            np.asarray(table),
+            np.asarray(c.table)[np.asarray(perm)])
+
+
+def test_unbound_gather_unchanged():
+    c = _mk(n_rows=2, max_len=8, block=4)
+    c = c.alloc(jnp.arange(2, dtype=jnp.int32),
+                jnp.full((2,), 8, jnp.int32))
+    k = jax.random.normal(KEY, (2, 8, 2, 8))
+    c = c.set_at(0, c.view_at(0).write_prompt(k, k))
+    kg, _ = c.view_at(0).gather()
+    np.testing.assert_array_equal(np.asarray(kg), np.asarray(k))
+
+
+# ------------------- scheduler: bit-identity + sharing ----------------------
+
+def _mirror_matches_device(s):
+    node = s.pool.cache[s._kv_key]
+    return s._free_blocks == int(np.asarray(node.refcount == 0).sum())
+
+
+def _drive(params, cfg, prompts, *, prefix_cache, prefix_len=0,
+           prefix_embeds=None, n_slots=2, kv_blocks=None, max_new=6,
+           check_mirror=True):
+    """Submit all prompts (queueing when > n_slots), drain, return
+    ({rid: tokens}, scheduler)."""
+    sched = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=n_slots, prompt_len=16, max_new_cap=max_new,
+        eos_id=1, kv="paged", kv_block=4, kv_blocks=kv_blocks,
+        prefix_len=prefix_len, prefill="chunked", chunk_tokens=5,
+        prefix_cache=prefix_cache)
+    for b, p in enumerate(prompts):
+        sched.submit(np.asarray(p)[None, :], max_new=max_new,
+                     request_id=b,
+                     prefix_embeds=(prefix_embeds[b:b + 1]
+                                    if prefix_embeds is not None
+                                    else None))
+    out = {}
+    while sched.pending:
+        for f in sched.step():
+            out[f.request_id] = f.tokens
+        if check_mirror:
+            assert _mirror_matches_device(sched), \
+                "host free-block mirror drifted from device refcounts"
+    return out, sched
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "dbrx-132b",
+                                  "internvl2-1b"])
+def test_prefix_cache_bit_identical_cold_and_warm(arch):
+    """Dense/MoE/VLM through the scheduler with queueing: 5 requests
+    (2 distinct prompts, repeated) into 2 slots. With the prefix
+    cache, request 0/1 are COLD (index empty / different prompt) and
+    the repeats are WARM (blocks mapped) — greedy tokens must equal
+    the cache-off run for every request, and hits must be recorded."""
+    cfg = get_config(arch, smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    rng = np.random.default_rng(7)
+    # exact prompt_len: MoE prompts must not be right-padded
+    a = rng.integers(2, cfg.vocab, size=16).astype(np.int32)
+    b = rng.integers(2, cfg.vocab, size=16).astype(np.int32)
+    prompts = [a, b, a, a, b]
+    prefix_len, pe = 0, None
+    if cfg.family == "vlm":
+        prefix_len = cfg.n_patches
+        pe = jax.random.normal(
+            KEY, (len(prompts), cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        pe = jnp.concatenate([pe[:1], pe[1:2], pe[:1], pe[:1], pe[1:2]])
+    off, _ = _drive(params, cfg, prompts, prefix_cache=False,
+                    prefix_len=prefix_len, prefix_embeds=pe,
+                    check_mirror=False)
+    on, s = _drive(params, cfg, prompts, prefix_cache=True,
+                   prefix_len=prefix_len, prefix_embeds=pe)
+    assert on.keys() == off.keys()
+    for rid in off:
+        np.testing.assert_array_equal(on[rid], off[rid])
+    assert s.prefix_hit_blocks > 0
+    # after drain every non-pinned block is free, and the mirror knows
+    assert _mirror_matches_device(s)
+    assert s.free_blocks == s.kv_blocks - len(s._prefix_index)
+
+
+def test_vlm_distinct_images_never_hit():
+    """Same token prompt, different patch embeds: the chain seed
+    diverges at block 0, so nothing may be shared (a text-only hash
+    would serve the wrong image's K/V)."""
+    cfg = get_config("internvl2-1b", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    rng = np.random.default_rng(3)
+    a = rng.integers(2, cfg.vocab, size=16).astype(np.int32)
+    pe = jax.random.normal(KEY, (2, cfg.n_patches, cfg.d_model),
+                           jnp.bfloat16)
+    # n_slots=1 forces request 1 to admit AFTER request 0's entries
+    # turn READY — a text-only hash would hit here
+    on, s = _drive(params, cfg, [a, a], prefix_cache=True, n_slots=1,
+                   prefix_len=cfg.n_patches, prefix_embeds=pe)
+    assert s.prefix_hit_blocks == 0
+
+
+def test_warm_admission_skips_prefill_steps(smollm):
+    """A warm hit starts prefilling at its first uncached block: the
+    second (identical) request costs exactly `hit_blocks * block /
+    chunk` fewer loop iterations than the cold one."""
+    cfg, params = smollm
+    rng = np.random.default_rng(5)
+    p = rng.integers(2, cfg.vocab, size=16).astype(np.int32)
+    sched = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=2, prompt_len=16, max_new_cap=4, eos_id=1,
+        kv="paged", kv_block=4, prefill="chunked", chunk_tokens=4,
+        prefix_cache=True)
+    sched.submit(p[None, :], max_new=4)
+    list(sched.run_until_drained())
+    cold_steps = sched.total_steps
+    sched.submit(p[None, :], max_new=4)
+    list(sched.run_until_drained())
+    warm_steps = sched.total_steps - cold_steps
+    # plen=16 -> cap 3 shared blocks = 12 positions = 3 chunks skipped
+    assert sched.prefix_hit_blocks == 3
+    assert warm_steps == cold_steps - 3
+
+
+def test_sharing_doubles_capacity_at_equal_pool(smollm):
+    """Equal pool bytes, hot repeated prompt: with sharing, >= 2x the
+    requests are resident at once (the ISSUE's capacity criterion)."""
+    cfg, params = smollm
+    rng = np.random.default_rng(9)
+    p = rng.integers(2, cfg.vocab, size=16).astype(np.int32)
+    # each request: stream 16 + 3 new + 1 = 20 -> 5 blocks at block=4;
+    # a pool of 12 holds 2 cold requests. A warm request maps 3 cached
+    # blocks and needs only 2 fresh: after the warming request pins
+    # its 4 prompt blocks, the remaining 8 free blocks hold FOUR
+    # resident requests — 2x at equal pool bytes.
+    prompts = [p] * 5
+
+    def peak(prefix_cache):
+        sched = sched_lib.DecodeScheduler(
+            params, cfg, n_slots=4, prompt_len=16, max_new_cap=3,
+            eos_id=1, kv="paged", kv_block=4, kv_blocks=12,
+            prefill="chunked", chunk_tokens=4, admit_threshold=1,
+            prefix_cache=prefix_cache)
+        # warm the index with one solo request first
+        sched.submit(p[None, :], max_new=3)
+        list(sched.run_until_drained())
+        sched.peak_resident = 0      # count the hot phase only
+        for q in prompts:
+            sched.submit(q[None, :], max_new=3)
+        list(sched.run_until_drained())
+        # identical requests admitted together retire within one
+        # segment, so sample residency where the scheduler does:
+        # right after admission (peak_resident), not post-harvest
+        return sched.peak_resident
+
+    assert peak(False) == 2
+    assert peak(True) >= 4
+
+
+def test_eviction_frees_pinned_blocks_for_new_prompts(smollm):
+    """When fresh blocks run out, LRU unreferenced index entries are
+    evicted (pins released in the same admission dispatch) and the
+    new prompt still decodes correctly."""
+    cfg, params = smollm
+    rng = np.random.default_rng(13)
+    a = rng.integers(2, cfg.vocab, size=16).astype(np.int32)
+    b = rng.integers(2, cfg.vocab, size=16).astype(np.int32)
+    # 6 blocks per resident request + 3 pinned after retirement; a
+    # pool of 8 forces the second prompt to evict the first's pins
+    sched = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=2, prompt_len=16, max_new_cap=4, eos_id=1,
+        kv="paged", kv_block=4, kv_blocks=8, prefill="chunked",
+        chunk_tokens=4, prefix_cache=True)
+    off = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=2, prompt_len=16, max_new_cap=4, eos_id=1,
+        kv="paged", kv_block=4, kv_blocks=8, prefill="chunked",
+        chunk_tokens=4)
+    outs = {}
+    ref = {}
+    for i, q in enumerate([a, b, a]):
+        sched.submit(q[None, :], max_new=4, request_id=i)
+        off.submit(q[None, :], max_new=4, request_id=i)
+        for f in sched.run_until_drained():
+            outs[f.request_id] = f.tokens
+        for f in off.run_until_drained():
+            ref[f.request_id] = f.tokens
+        assert _mirror_matches_device(sched)
+    assert sched.prefix_evictions > 0
+    for rid in ref:
+        np.testing.assert_array_equal(outs[rid], ref[rid])
+
+
+def test_prefix_cache_requires_chunked_paged(smollm):
+    cfg, params = smollm
+    with pytest.raises(ValueError, match="prefix_cache"):
+        sched_lib.DecodeScheduler(
+            params, cfg, n_slots=1, prompt_len=8, max_new_cap=2,
+            kv="dense", prefill="chunked", prefix_cache=True)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        sched_lib.DecodeScheduler(
+            params, cfg, n_slots=1, prompt_len=8, max_new_cap=2,
+            kv="paged", prefill="oneshot", prefix_cache=True)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_config("smollm-135m", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    return cfg, params

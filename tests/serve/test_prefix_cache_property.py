@@ -1,0 +1,155 @@
+"""Hypothesis property sweeps over the prefix-cache sharing invariants
+(DESIGN.md §8.3). Separate module so the deterministic suite in
+``test_prefix_cache.py`` still runs where hypothesis is absent.
+
+- no block is ever both free and referenced;
+- device refcounts always equal table occurrences plus live pins;
+- the scheduler's host free-block mirror never drifts from the device
+  refcounts, whatever mix of cold/warm/evicting admissions runs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install repro[test]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.serve import kv_cache as kvc
+from repro.serve import scheduler as sched_lib
+
+KEY = jax.random.PRNGKey(11)
+
+# keep examples small: every example runs real device dispatches
+FAST = settings(max_examples=20, deadline=None)
+SLOW = settings(max_examples=8, deadline=None)
+
+
+def _mk(n_rows=3, max_len=12, block=4, n_blocks=8):
+    return kvc.PagedKVCache.create(2, n_rows, max_len, 2, 8, jnp.float32,
+                                   block=block, n_blocks=n_blocks)
+
+
+def _refcounts_from_state(c):
+    table = np.asarray(c.table)
+    rc = np.zeros(c.n_blocks, np.int64)
+    for b in table.reshape(-1):
+        if b >= 0:
+            rc[b] += 1
+    return rc
+
+
+# op encoding: (kind, row, blocks) — kind 0 = free+alloc (with a pin on
+# the first column), 1 = free, 2 = CoW over the leading window
+_ops = st.lists(st.tuples(st.integers(0, 2), st.integers(0, 2),
+                          st.integers(1, 3)),
+                min_size=1, max_size=6)
+
+
+class TestCacheInvariants:
+    """After ANY op sequence: a block is free iff its refcount is 0,
+    refcounts equal table occurrences plus live pins, and no block is
+    simultaneously free and referenced."""
+
+    @FAST
+    @given(ops=_ops)
+    def test_refcounts_match_tables_and_pins(self, ops):
+        c = _mk()
+        bpr = c.blocks_per_row
+        pins = np.zeros(c.n_blocks, np.int64)   # host pin ledger
+        for kind, row, blocks in ops:
+            r = jnp.asarray([row], jnp.int32)
+            if kind == 0:
+                pin = np.zeros((1, bpr), bool)
+                pin[0, 0] = True
+                c = c.free(r)
+                c = c.alloc(r, jnp.asarray([blocks * 4], jnp.int32),
+                            pin=jnp.asarray(pin))
+                got = np.asarray(c.table)[row]
+                if got[0] >= 0:                 # row fit: pin landed
+                    pins[got[0]] += 1
+            elif kind == 1:
+                c = c.free(r)
+            else:
+                c = c.ensure_private(r, start=0, width=blocks * 4)
+            rc = np.asarray(c.refcount)
+            np.testing.assert_array_equal(rc,
+                                          _refcounts_from_state(c) + pins)
+            assert int(c.free_count) == int((rc == 0).sum())
+            # free blocks are referenced by NO table and own nothing
+            table = np.asarray(c.table)
+            owner = np.asarray(c.owner)
+            for bid in np.nonzero(rc == 0)[0]:
+                assert not (table == bid).any()
+                assert owner[bid] == -1
+
+    @FAST
+    @given(ops=_ops)
+    def test_shared_mapping_then_ops_keep_invariants(self, ops):
+        c = _mk()
+        bpr = c.blocks_per_row
+        c = c.alloc(jnp.asarray([0], jnp.int32),
+                    jnp.asarray([12], jnp.int32))
+        donor = np.asarray(c.table)[0]
+        shared = np.full((1, bpr), -1, np.int32)
+        shared[0, :2] = donor[:2]
+        c = c.alloc(jnp.asarray([1], jnp.int32),
+                    jnp.asarray([12], jnp.int32),
+                    shared=jnp.asarray(shared))
+        for kind, row, blocks in ops:
+            r = jnp.asarray([row], jnp.int32)
+            if kind == 0:
+                c = c.free(r)
+                c = c.alloc(r, jnp.asarray([blocks * 4], jnp.int32))
+            elif kind == 1:
+                c = c.free(r)
+            else:
+                c = c.ensure_private(r, start=0, width=blocks * 4)
+            rc = np.asarray(c.refcount)
+            np.testing.assert_array_equal(rc, _refcounts_from_state(c))
+            assert int(c.free_count) == int((rc == 0).sum())
+
+
+_SCHED = {}
+
+
+def _shared_sched():
+    """One scheduler reused across hypothesis examples (a fresh
+    scheduler per example would recompile admission + step)."""
+    if not _SCHED:
+        cfg = get_config("smollm-135m", smoke=True)
+        params = model_zoo.init_params(cfg, KEY)
+        rng = np.random.default_rng(21)
+        pool = [rng.integers(2, cfg.vocab, size=14).astype(np.int32)
+                for _ in range(3)]
+        sched = sched_lib.DecodeScheduler(
+            params, cfg, n_slots=2, prompt_len=16, max_new_cap=4,
+            eos_id=1, kv="paged", kv_block=4, kv_blocks=14,
+            prefill="chunked", chunk_tokens=4, prefix_cache=True)
+        _SCHED.update(sched=sched, pool=pool)
+    return _SCHED["sched"], _SCHED["pool"]
+
+
+class TestSchedulerMirrorNeverDrifts:
+    @SLOW
+    @given(picks=st.lists(st.integers(0, 2), min_size=1, max_size=4))
+    def test_mirror_equals_device_after_every_round(self, picks):
+        sched, pool = _shared_sched()
+        assert sched.pending == 0      # drained between examples
+        for p in picks:
+            sched.submit(pool[p][None, :], max_new=4)
+        while sched.pending:
+            before = sched.pending
+            sched.step()
+            node = sched.pool.cache[sched._kv_key]
+            dev_free = int(np.asarray(node.refcount == 0).sum())
+            assert sched._free_blocks == dev_free, \
+                "host free-block mirror drifted from device refcounts"
+            assert before >= sched.pending
+        # index pins are the only resident references after drain
+        assert sched.free_blocks == sched.kv_blocks \
+            - len(sched._prefix_index)

@@ -1,0 +1,84 @@
+"""Sampling-policy unit tests (``repro.serve.sampling``): top-k keeps
+EXACTLY k candidates under ties, validates against the vocab, and stays
+deterministic per key."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import sampling as sampling_lib
+
+SP = sampling_lib.SamplingParams
+
+
+def _draws(logits, sp, n=300, seed=0):
+    """Token ids sampled from ``logits`` across ``n`` distinct keys."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+    f = jax.jit(lambda k: sampling_lib.sample(logits, k, sp))
+    return {int(f(k)) for k in keys}
+
+
+def test_top_k_ties_never_leak_past_k():
+    """Three logits tied with the k-th value must NOT all survive a
+    top_k=2 filter: exactly 2 candidates remain (lowest-index ties,
+    matching lax.top_k's own tie-breaking). Pre-fix, `scaled < kth`
+    kept all three and index 3 was sampled with p=1/3."""
+    logits = jnp.asarray([0.0, 1.0, 1.0, 1.0, -2.0])
+    seen = _draws(logits, SP(temperature=1.0, top_k=2))
+    assert seen == {1, 2}
+
+
+def test_top_k_exact_count_with_bf16_ties():
+    """bf16 logits round distinct activations into exact ties; the
+    filter must still keep exactly k."""
+    logits = jnp.asarray(
+        [0.5001, 0.5002, 0.5003, 0.1, -1.0],
+        jnp.bfloat16).astype(jnp.float32)
+    # bf16 rounds the first three to the same value -> 3-way tie at top
+    assert len(set(np.asarray(logits)[:3].tolist())) == 1
+    seen = _draws(logits, SP(temperature=1.0, top_k=2))
+    assert seen == {0, 1}
+
+
+def test_top_k_without_ties_unchanged():
+    logits = jnp.asarray([0.0, 3.0, 2.0, 1.0, -2.0])
+    seen = _draws(logits, SP(temperature=1.0, top_k=2))
+    assert seen == {1, 2}
+
+
+def test_top_k_full_vocab_keeps_everything():
+    logits = jnp.asarray([1.0, 1.0, 1.0])
+    seen = _draws(logits, SP(temperature=1.0, top_k=3), n=200)
+    assert seen == {0, 1, 2}
+
+
+def test_top_k_deterministic_per_key():
+    logits = jnp.asarray([0.0, 1.0, 1.0, 0.5])
+    sp = SP(temperature=0.7, top_k=2)
+    key = jax.random.PRNGKey(7)
+    a = sampling_lib.sample(logits, key, sp)
+    b = sampling_lib.sample(logits, key, sp)
+    assert int(a) == int(b)
+
+
+def test_top_k_validates_against_vocab():
+    logits = jnp.zeros((4,))
+    with pytest.raises(ValueError, match="top_k=5 exceeds"):
+        sampling_lib.sample(logits, jax.random.PRNGKey(0),
+                            SP(temperature=1.0, top_k=5))
+    with pytest.raises(ValueError, match="exceeds"):
+        sampling_lib.sample_slots(jnp.zeros((2, 4)),
+                                  jnp.zeros((2, 2), jnp.uint32),
+                                  SP(top_k=5))
+
+
+def test_sample_slots_matches_per_slot_sample():
+    logits = jnp.asarray([[0.0, 1.0, 1.0, -1.0],
+                          [2.0, 0.0, 2.0, 0.5]])
+    keys = jax.random.split(jax.random.PRNGKey(3), 2)
+    sp = SP(temperature=1.0, top_k=2)
+    got = sampling_lib.sample_slots(logits, keys, sp)
+    want = [sampling_lib.sample(logits[i], keys[i], sp) for i in range(2)]
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray([int(w) for w in want]))

@@ -23,7 +23,8 @@ def main() -> None:
                    bench_model_parallel, bench_paged_attention,
                    bench_paged_kv, bench_parallel_iterations,
                    bench_prefix_cache, bench_serving,
-                   bench_static_vs_dynamic, roofline_report)
+                   bench_spec_decode, bench_static_vs_dynamic,
+                   roofline_report)
 
     suites = [
         ("Fig11", bench_loop_scaling),
@@ -38,6 +39,7 @@ def main() -> None:
         ("PagedAttn", bench_paged_attention),
         ("ChunkedPrefill", bench_chunked_prefill),
         ("PrefixCache", bench_prefix_cache),
+        ("SpecDecode", bench_spec_decode),
         ("Roofline", roofline_report),
     ]
     ap = argparse.ArgumentParser()

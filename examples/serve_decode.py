@@ -165,6 +165,32 @@ def main():
     print(f"[serve] prefix cache: identical tokens cold and warm, "
           f"{pfx.prefix_hit_blocks} blocks served from cache")
 
+    # ---- speculative decoding: draft k, verify once, accept a prefix ---
+    # speculative=SpecConfig(k=...) (chunked prefill only) drafts k
+    # candidate tokens per running slot each iteration — here with the
+    # zero-parameter prompt-lookup (n-gram) drafter — then verifies all
+    # k+1 positions in ONE forward through the block table and accepts
+    # the matching prefix in-graph. Rejected speculative K/V is never
+    # rolled back: the next verify window rewrites the stale lanes
+    # before attending (DESIGN.md §8.4). Greedy output is bit-identical
+    # to sequential decode; the win is fewer scheduler iterations.
+    # (CLI equivalent: ... --prefill chunked --spec-k 4)
+    from repro.serve import speculative as spec_lib
+    spec = sched_lib.DecodeScheduler(
+        params, kcfg, n_slots=max(2, args.batch // 2),
+        prompt_len=args.prompt_len, max_new_cap=args.max_new, eos_id=1,
+        kv="paged", kv_block=8, prefill="chunked", chunk_tokens=5,
+        speculative=spec_lib.SpecConfig(k=4, drafter="ngram", ngram=2))
+    for b in range(args.batch):
+        spec.submit(prompt[b:b + 1], max_new=budgets[b])
+    sf = {f.request_id: f for f in spec.run_until_drained()}
+    for f in finished:
+        assert sf[f.request_id].tokens.tolist() == f.tokens.tolist()
+    print(f"[serve] speculative (k=4, ngram): identical tokens, "
+          f"{spec.accepted_tokens}/{spec.drafted_tokens} drafts accepted "
+          f"({spec.accept_rate * 100:.0f}%), "
+          f"{spec.total_steps} vs {chunked.total_steps} scheduler steps")
+
 
 if __name__ == "__main__":
     main()

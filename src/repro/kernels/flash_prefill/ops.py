@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from .. import on_tpu
 from .kernel import flash_prefill as _kernel
@@ -16,4 +17,32 @@ def flash_prefill(q, k_pool, v_pool, table, q_off):
                    interpret=not on_tpu())
 
 
-__all__ = ["flash_prefill", "flash_prefill_ref"]
+@jax.jit
+def flash_verify(q, k_pool, v_pool, table, q_off):
+    """Speculative-decode verify-window entry point.
+
+    Same kernel, different caller contract: ``q (B, W, hq, hd)`` is a
+    k+1-token speculative window whose first query sits at per-row
+    ``q_off = cur_len - 1`` (the chunk contract — query ``j`` sees
+    lanes ``[0, q_off + j]`` — is exactly the verify visibility rule).
+    The window is tiny (W = k+1, typically ≤ 8), so the query tile
+    ``W·G`` can sit under the fp32 (8, 128) sublane minimum on real
+    TPUs: pad the window up front, slice the pad off after. Pad
+    queries read positions past the window through the same clamped
+    block map (an out-of-range table entry clamps to the drop/0 block);
+    their outputs are garbage and discarded, and query rows are
+    independent, so real rows are untouched.
+    """
+    B, W, hq, hd = q.shape
+    g = hq // k_pool.shape[2]
+    wp = W
+    while (wp * g) % 8:
+        wp += 1
+    if wp != W:
+        q = jnp.pad(q, ((0, 0), (0, wp - W), (0, 0), (0, 0)))
+    out = _kernel(q, k_pool, v_pool, table, q_off,
+                  interpret=not on_tpu())
+    return out[:, :W]
+
+
+__all__ = ["flash_prefill", "flash_verify", "flash_prefill_ref"]

@@ -31,6 +31,17 @@ stream in (``benchmarks/bench_chunked_prefill.py`` measures the
 bound). The report line also names the prefill path that ran
 (``flash-paged:*`` vs ``dense-bucketed``).
 
+``--spec-k K`` (with ``--prefill chunked``) turns on in-graph
+speculative decoding (DESIGN.md §8.4): every decode iteration drafts
+``K`` candidate tokens per running slot — ``--spec-drafter ngram``
+(default) looks the continuation up in the slot's own prompt + output,
+``--spec-drafter model --draft-arch A`` decodes them from a small
+draft model riding its own cache — and ONE verify forward through the
+block table scores all ``K+1`` positions; the accepted prefix lands
+in-graph, so accepted tokens cost one iteration instead of
+``accepted+1``. Greedy outputs stay bit-identical; the report prints
+accepted/drafted and the mean accept length.
+
 ``--prefix-cache`` (with ``--prefill chunked --kv paged``) adds
 content-addressed prefix caching (DESIGN.md §8.3): a hot prompt
 prefills ONCE — later identical prompts map the cached blocks into
@@ -53,6 +64,7 @@ from repro.configs import get_config
 from repro.models import model_zoo
 from repro.serve import engine, sampling
 from repro.serve import scheduler as sched_lib
+from repro.serve import speculative as spec_lib
 
 
 def build_workload(args, rng):
@@ -85,12 +97,24 @@ def run_continuous(args, cfg, params, workload):
     cap = max(m for _, m in workload)
     sp = sampling.SamplingParams(temperature=args.temperature,
                                  top_k=args.top_k)
+    spec, draft_params, draft_cfg = None, None, None
+    if args.spec_k:
+        spec = spec_lib.SpecConfig(k=args.spec_k,
+                                   drafter=args.spec_drafter,
+                                   ngram=args.spec_ngram)
+        if args.spec_drafter == "model":
+            if not args.draft_arch:
+                raise SystemExit("--spec-drafter model needs --draft-arch")
+            draft_cfg = get_config(args.draft_arch, smoke=args.smoke)
+            draft_params = model_zoo.init_params(draft_cfg,
+                                                 jax.random.PRNGKey(1))
     sched = sched_lib.DecodeScheduler(
         params, cfg, n_slots=args.slots, prompt_len=args.prompt_len,
         max_new_cap=cap, eos_id=args.eos_id, sampling=sp, seed=args.seed,
         kv=args.kv, kv_block=args.kv_block, kv_blocks=args.kv_blocks,
         prefill=args.prefill, chunk_tokens=args.chunk_tokens,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache, speculative=spec,
+        draft_params=draft_params, draft_cfg=draft_cfg)
     rng = np.random.default_rng(args.seed)
     # --prompt-pool P draws the workload's prompts from P distinct
     # prompts (default: all distinct) — hot repeated prompts are the
@@ -137,7 +161,11 @@ def run_continuous(args, cfg, params, workload):
             "tokens": toks, "attn_impl": sched.attn_impl,
             "prefill_impl": sched.prefill_impl,
             "prefix_hit_blocks": sched.prefix_hit_blocks,
-            "prefix_evictions": sched.prefix_evictions}
+            "prefix_evictions": sched.prefix_evictions,
+            "accepted_tokens": sched.accepted_tokens,
+            "drafted_tokens": sched.drafted_tokens,
+            "accept_rate": sched.accept_rate,
+            "mean_accept_len": sched.mean_accept_len}
 
 
 def run_batch_sync(args, cfg, params, workload):
@@ -237,6 +265,23 @@ def main():
                          "row's table (copy-on-write shared, refcounted) "
                          "and its prefill starts at the first uncached "
                          "block; greedy outputs stay bit-identical")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft this many "
+                         "candidate tokens per decode iteration and "
+                         "verify them all in ONE target forward "
+                         "(requires --prefill chunked; 0 = off); "
+                         "greedy outputs stay bit-identical")
+    ap.add_argument("--spec-drafter", choices=("ngram", "model"),
+                    default="ngram",
+                    help="draft source: 'ngram' looks the continuation "
+                         "up in the slot's own prompt + emitted tokens "
+                         "(no extra model); 'model' decodes drafts from "
+                         "--draft-arch riding its own KV cache")
+    ap.add_argument("--spec-ngram", type=int, default=2,
+                    help="n-gram drafter match length")
+    ap.add_argument("--draft-arch", default=None,
+                    help="draft model architecture for --spec-drafter "
+                         "model (must share the target's vocab)")
     ap.add_argument("--prompt-pool", type=int, default=0,
                     help="draw the workload's prompts from this many "
                          "distinct prompts (0 = all distinct); the "
@@ -265,6 +310,14 @@ def main():
         print(f"[serve] prefix cache: {cont['prefix_hit_blocks']} "
               f"blocks served from cache, "
               f"{cont['prefix_evictions']} evictions")
+    if args.spec_k:
+        print(f"[serve] speculative (k={args.spec_k}, "
+              f"{args.spec_drafter}): "
+              f"{cont['accepted_tokens']}/{cont['drafted_tokens']} "
+              f"drafts accepted "
+              f"({cont['accept_rate'] * 100:.0f}%), "
+              f"mean accept length "
+              f"{cont['mean_accept_len']:.2f}")
     if args.compare:
         sync = run_batch_sync(args, cfg, params, workload)
         print(f"[serve] batch-sync ({sync['attn_impl']}; offline, no "

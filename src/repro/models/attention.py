@@ -211,6 +211,63 @@ def prefill_attention(q, kv, *, q_off, attn_impl: str = "xla",
     return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, D).astype(q.dtype)
 
 
+def verify_attention(q, kv, *, q_off, attn_impl: str = "xla"):
+    """Multi-token verify window against a cache view (speculative
+    decode: score k+1 candidate positions in ONE pass).
+
+    q: (B, W, H, D); ``kv`` is a layer view whose lanes already hold
+    the window's own K/V (callers ``write_chunk`` at ``q_off`` first,
+    exactly like the chunked-prefill path). q_off: (B,) int32 — the
+    absolute position of ``q[:, 0]`` per row (``cur_len - 1``, the
+    slot's pending-token position). Query ``j`` of row ``b`` attends
+    lanes ``[0, q_off[b] + j]`` — the visibility single-token decode at
+    ``cur_len = q_off + j + 1`` would have.
+
+    The gather path is ``decode_attention``'s full-width masked softmax
+    VECTORIZED over the window dim — NOT the online-softmax
+    ``prefill_attention`` runs — because the verify positions replace
+    DECODE steps: under greedy sampling the scheduler promises emitted
+    tokens bitwise-identical to sequential decode, and the two softmax
+    formulations differ in fp32 low bits, enough to flip an argmax
+    between bf16-rounded near-ties. Stale lanes past ``q_off + j``
+    (rejected drafts from earlier windows) contribute exactly zero:
+    they are masked to ``NEG_INF`` before the softmax, whatever finite
+    garbage they hold.
+
+    ``attn_impl="pallas"`` routes a PAGED view to the flash-prefill
+    kernel's verify entry (``kernels.flash_prefill.ops.flash_verify``):
+    the window streams prior K/V through the block table with fp32
+    accumulators, gather-free — same cross-path agreement contract as
+    the decode kernel (parity-pinned in
+    ``tests/kernels/test_verify_window.py``).
+    """
+    if attn_impl == "pallas":
+        state = getattr(kv, "paged_state", lambda: None)()
+        if state is not None:
+            from ..kernels.flash_prefill.ops import flash_verify
+            k_pool, v_pool, table = state
+            return flash_verify(q, k_pool, v_pool, table,
+                                jnp.asarray(q_off, jnp.int32))
+    k_cache, v_cache = kv.gather()
+    B, W, H, D = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = (q * scale).reshape(B, W, KV, G, D)
+    s = jnp.einsum("bwkgd,btkd->bwkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    qpos = jnp.asarray(q_off, jnp.int32)[:, None] \
+        + jnp.arange(W, dtype=jnp.int32)[None, :]              # (B, W)
+    mask = jnp.arange(T)[None, None, None, None, :] \
+        <= qpos[:, :, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # p stays fp32 through PV — the decode_attention contract.
+    out = jnp.einsum("bwkgt,btkd->bwkgd", p, v_cache.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, W, H, D).astype(q.dtype)
+
+
 def decode_attention(q, kv, *, cur_len, attn_impl: str = "xla"):
     """Single-position attention against a cache view.
 

@@ -114,7 +114,8 @@ def build_params(cfg, b):
 
 def attn_apply(p, x, cfg, rules, *, positions, mode: str = "full",
                kv_cache=None, cur_len=None, chunk_off=None):
-    """mode: full | prefill | chunk | decode. Returns (out, new_kv | None).
+    """mode: full | prefill | chunk | decode | verify.
+    Returns (out, new_kv | None).
 
     ``kv_cache`` (prefill/chunk/decode modes) is a KV-cache **layer
     view** (``repro.serve.kv_cache``): an object with ``write_prompt``
@@ -129,6 +130,13 @@ def attn_apply(p, x, cfg, rules, *, positions, mode: str = "full",
     written at those offsets and attention runs against the CACHE
     (prior chunks included) — through the block table when
     ``cfg.attn_impl == "pallas"`` and the view is paged.
+
+    ``mode="verify"`` is the speculative-decode verify window: same
+    write path as ``"chunk"`` (the k+1 window's K/V lands at per-row
+    ``chunk_off = cur_len - 1``, overwriting any stale rejected-draft
+    lanes there), but attention runs ``verify_attention`` — per-
+    position DECODE math, so greedy acceptance stays bitwise equal to
+    sequential decode (see ``models.attention.verify_attention``).
     """
     cdt = cfg.dtype("compute")
     xc = x.astype(cdt)
@@ -186,6 +194,14 @@ def attn_apply(p, x, cfg, rules, *, positions, mode: str = "full",
         out = attn_lib.prefill_attention(q, new_kv, q_off=chunk_off,
                                          attn_impl=cfg.attn_impl,
                                          k_chunk=cfg.attn_k_chunk)
+    elif mode == "verify":
+        # Speculative verify: write the whole k+1 window at the slot's
+        # pending position FIRST (stale rejected-draft K/V from the
+        # previous window is rewritten before any query sees it), then
+        # score every position with decode-exact attention.
+        new_kv = kv_cache.write_chunk(k, v, chunk_off)
+        out = attn_lib.verify_attention(q, new_kv, q_off=chunk_off,
+                                        attn_impl=cfg.attn_impl)
     elif mode == "decode":
         # The incoming token's K/V lands at cur_len - 1 (per-row depths
         # under slot-based continuous batching); the view routes the

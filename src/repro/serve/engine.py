@@ -322,6 +322,54 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Any,
     return _logits_head(params, cfg, x, rules), new_cache
 
 
+def verify_step(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
+                cur_len, rules=None, *, write_mask=None
+                ) -> Tuple[jax.Array, Any]:
+    """Score a W-token speculative window in ONE forward.
+
+    tokens: (B, W) int32 — ``[pending, d_1..d_{W-1}]`` per row; the
+    window starts at ``cur_len - 1`` (the pending token's position), so
+    position ``j``'s logits are the distribution over the token at
+    emission index ``n_emitted + j + 1`` GIVEN the window prefix up to
+    ``j``. Returns (logits (B, W, Vp), new_cache).
+
+    The window's K/V is written through the chunked-prefill write path
+    at per-row offsets (``mode="verify"``: ``write_chunk`` then
+    decode-exact ``verify_attention``), overwriting any stale
+    rejected-draft lanes from the previous iteration before a query
+    can see them. Attention-decoder families only — the same gate as
+    chunked prefill, whose machinery this rides. ``write_mask`` gates
+    rows exactly as in ``decode_step``.
+    """
+    fam = cfg.family
+    if fam not in ("dense", "moe", "vlm"):
+        raise ValueError(f"verify_step requires an attention-decoder "
+                         f"family (dense/moe/vlm); got {fam!r}")
+    cdt = cfg.dtype("compute")
+    W = tokens.shape[1]
+    off = jnp.asarray(cur_len, jnp.int32) - 1                   # (B,)
+    positions = off[:, None] + jnp.arange(W, dtype=jnp.int32)[None]
+    x = jnp.take(params["embed"].astype(cdt), tokens, axis=0)
+    x = sh.constrain(x, rules, (sh.BATCH, None, None))
+    # CoW before the layer scan, once per window (cross-layer state) —
+    # rejected drafts therefore can never write into a block other
+    # references still read, the §8.3 sharing invariant.
+    node = cache["attn"].ensure_private(start=off, width=W,
+                                        mask=write_mask)
+
+    def f(carry, xs):
+        x = carry
+        lp, leaves = xs
+        x, new_view, _ = transformer.attn_block(
+            lp, x, cfg, rules, positions=positions, mode="verify",
+            kv_cache=node.view(leaves, mask=write_mask), chunk_off=off)
+        return x, new_view.leaves
+
+    x, new_leaves = jax.lax.scan(f, x, (params["layers"], node.layers))
+    return (_logits_head(params, cfg, x, rules),
+            {"attn": node.with_layers(new_leaves)})
+
+
 # =========================== prefill ========================================
 
 def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,

@@ -37,14 +37,15 @@ class SamplingParams:
         return self.temperature <= 0.0
 
 
-def sample(logits: jax.Array, key, sp: SamplingParams) -> jax.Array:
-    """Sample token ids from ``logits (..., V)`` -> ``(...)`` int32."""
-    if sp.top_k > logits.shape[-1]:
-        raise ValueError(
-            f"top_k={sp.top_k} exceeds the vocab size "
-            f"{logits.shape[-1]}; top_k must be in [0, vocab]")
-    if sp.greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+def filtered_logits(logits: jax.Array, sp: SamplingParams) -> jax.Array:
+    """Temperature-scaled, top-k-filtered fp32 logits ``(..., V)``.
+
+    This is EXACTLY the distribution ``sample`` draws from, factored
+    out so speculative acceptance (``serve.speculative``) scores draft
+    candidates against the same filtered distribution the
+    non-speculative path samples from — anything else would bias the
+    accepted stream.
+    """
     scaled = logits.astype(jnp.float32) / sp.temperature
     if sp.top_k > 0:
         # Keep EXACTLY top_k candidates. Masking `scaled < kth` alone
@@ -60,7 +61,19 @@ def sample(logits: jax.Array, key, sp: SamplingParams) -> jax.Array:
         tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=-1)
         keep = gt | (tie & (tie_rank <= sp.top_k - n_gt))
         scaled = jnp.where(keep, scaled, -jnp.inf)
-    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return scaled
+
+
+def sample(logits: jax.Array, key, sp: SamplingParams) -> jax.Array:
+    """Sample token ids from ``logits (..., V)`` -> ``(...)`` int32."""
+    if sp.top_k > logits.shape[-1]:
+        raise ValueError(
+            f"top_k={sp.top_k} exceeds the vocab size "
+            f"{logits.shape[-1]}; top_k must be in [0, vocab]")
+    if sp.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, filtered_logits(logits, sp),
+                                  axis=-1).astype(jnp.int32)
 
 
 def sample_slots(logits: jax.Array, keys: jax.Array,
@@ -84,5 +97,30 @@ def step_keys(keys: jax.Array, emitted: jax.Array) -> jax.Array:
 
     keys: (n_slots, 2) uint32; emitted: (n_slots,) int32 — the emission
     index of the token about to be sampled.
+
+    The fold is keyed by the token's EMISSION index, never by the
+    decode-iteration index. The two coincide only when every iteration
+    emits exactly one token; a speculative iteration emits a
+    data-dependent ``accepted + 1`` tokens, so iteration-keyed folding
+    would hand different windows different key streams depending on how
+    drafting went — breaking ``same key → same tokens``. Emission-index
+    keying makes the stream a pure function of (request key, emission
+    index); ``window_keys`` below vectorizes it over a window.
     """
     return jax.vmap(jax.random.fold_in)(keys, emitted)
+
+
+def window_keys(keys: jax.Array, first: jax.Array, width: int) -> jax.Array:
+    """Per-emission keys for a ``width``-token window, per slot.
+
+    keys: (n_slots, 2) uint32 request keys; first: (n_slots,) int32 —
+    the emission index of each slot's first window position. Returns
+    ``(n_slots, width, 2)`` where ``[:, j]`` equals
+    ``step_keys(keys, first + j)``: a speculative scheduler emitting a
+    whole window per iteration draws EXACTLY the key stream the
+    one-token-per-iteration path draws (regression-pinned in
+    ``tests/serve/test_speculative.py``).
+    """
+    idx = first[:, None] + jnp.arange(width, dtype=jnp.int32)[None]
+    return jax.vmap(jax.vmap(jax.random.fold_in, in_axes=(None, 0)))(
+        keys, idx)

@@ -112,6 +112,7 @@ import numpy as np
 from .. import core
 from ..dist import sharding as sh
 from . import engine, kv_cache as kvc, sampling as sampling_lib
+from . import speculative as spec_lib
 
 
 # =========================== pool state =====================================
@@ -154,13 +155,19 @@ class SlotPool:
     prefilling: jax.Array    # (n,) bool — slot mid-prefill
     prefix: Any = None       # (n, prefix_len, d) patch prefix embeds
                              # (chunked VLM pools; else None)
+    draft: Any = None        # draft model's own cache (speculative
+                             # pools with drafter="model"; else None)
+    slot_accepted: Any = None  # (n,) int32 — Σ extra tokens emitted
+                             # beyond 1/iteration (speculative pools)
+    slot_windows: Any = None   # (n,) int32 — Σ verify windows run
 
     def tree_flatten(self):
         return (self.cache, self.next_token, self.cur_len, self.n_emitted,
                 self.budget, self.active, self.done, self.request_id,
                 self.keys, self.out, self.steps, self.slot_steps,
                 self.prompt, self.plen, self.pf_pos, self.prefilling,
-                self.prefix), None
+                self.prefix, self.draft, self.slot_accepted,
+                self.slot_windows), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -303,7 +310,8 @@ class _PrefixIndex:
 def pool_shardings(cfg, n_slots: int, max_len: int, max_new_cap: int,
                    rules, mesh=None, *, kv: str = "dense",
                    kv_block: int = 16, kv_blocks: Optional[int] = None,
-                   prompt_len: int = 0, prefix_len: int = 0):
+                   prompt_len: int = 0, prefix_len: int = 0,
+                   draft_cfg=None):
     """NamedShardings for a ``SlotPool`` under ``rules``.
 
     Per-slot registers, dense cache rows, and the chunked-mode prompt
@@ -333,7 +341,13 @@ def pool_shardings(cfg, n_slots: int, max_len: int, max_new_cap: int,
         plen=vec, pf_pos=vec, prefilling=vec,
         prefix=(rules.sharding((sh.SLOT, None, None), mesh,
                                dims=(n_slots, prefix_len, cfg.d_model))
-                if prefix_len else None))
+                if prefix_len else None),
+        draft=(engine.cache_shardings(
+            draft_cfg, rules, mesh,
+            cache=engine.make_cache(draft_cfg, n_slots, max_len,
+                                    mode="abstract"),
+            row_axis=sh.SLOT) if draft_cfg is not None else None),
+        slot_accepted=vec, slot_windows=vec)
 
 
 # =========================== scheduler ======================================
@@ -388,6 +402,24 @@ class DecodeScheduler:
         = tighter inter-token latency bound for running slots, more
         iterations per prompt; the compiled step count does NOT depend
         on it (one trace serves every prompt length — no buckets).
+      speculative: a ``speculative.SpecConfig`` turns every decode
+        iteration into draft-k/verify-once (DESIGN.md §8.4): a cheap
+        proposer drafts k candidates per running slot, ONE target
+        forward scores all k+1 window positions through the block
+        table (``engine.verify_step``), and a data-dependent prefix is
+        accepted in-graph — ``cur_len`` advances by ``accepted + 1``
+        and up to k+1 tokens are emitted per iteration. Greedy outputs
+        stay BITWISE identical to the non-speculative pool; sampled
+        outputs draw the identical per-emission key stream. Requires
+        ``prefill="chunked"`` (the drafter reads the resident prompt;
+        verification rides the chunked write path).
+      draft_params / draft_cfg: the draft model for
+        ``speculative.drafter == "model"`` — a small zoo LM with the
+        TARGET's vocab (e.g. smollm-135m drafting for qwen2-7b). It
+        keeps its own per-slot cache in the pool (dense layout: the
+        draft is small by construction, so its cache is not worth
+        block-accounting) and prefills the prompt alongside the target
+        inside the same chunked iterations.
     """
 
     def __init__(self, params, cfg, *, n_slots: int, prompt_len: int,
@@ -398,7 +430,9 @@ class DecodeScheduler:
                  admit_threshold: int = 1, kv: str = "dense",
                  kv_block: int = 16, kv_blocks: Optional[int] = None,
                  prefill: str = "oneshot", chunk_tokens: int = 16,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 speculative: Optional[spec_lib.SpecConfig] = None,
+                 draft_params=None, draft_cfg=None):
         if n_slots < 1 or max_new_cap < 1:
             raise ValueError("need n_slots >= 1 and max_new_cap >= 1")
         if not 1 <= admit_threshold <= n_slots:
@@ -423,6 +457,12 @@ class DecodeScheduler:
                 "only the chunked path's per-row offsets support) and "
                 "kv='paged' (sharing is a block-table mapping); got "
                 f"prefill={prefill!r}, kv={kv!r}")
+        if speculative is not None:
+            spec_lib.validate(speculative, cfg, prefill, draft_cfg,
+                              draft_params, prefix_len)
+        elif draft_params is not None or draft_cfg is not None:
+            raise ValueError("draft_params/draft_cfg need "
+                             "speculative=SpecConfig(drafter='model')")
         if prefix_len and (cfg.family != "vlm"
                            or prefix_len != cfg.n_patches):
             # The in-graph admission derives the patch prefix from
@@ -453,6 +493,9 @@ class DecodeScheduler:
                                                       kv_block)
                           if kv_blocks is None else int(kv_blocks))
         self._kv_key = engine.kv_key(cfg)
+        self.speculative = speculative
+        self.draft_cfg = draft_cfg
+        self._draft_params = draft_params
         # Right padding is EXACT only for pure-attention prefills
         # (causal masking keeps real tokens blind to pad lanes). An SSM
         # recurrence keeps updating its conv/h state through the pad
@@ -530,14 +573,24 @@ class DecodeScheduler:
             prefilling=jnp.zeros((n,), bool),
             prefix=(jnp.zeros((n, pfx, self.cfg.d_model),
                               self.cfg.dtype("compute"))
-                    if pfx else None))
+                    if pfx else None),
+            # the draft model's cache rides the pool as a dense column
+            # layout: the draft is small by construction, so its bytes
+            # are noise next to the target's pool and not worth block
+            # accounting (alloc/free are no-ops; stale rows past a
+            # retired request are causally invisible, same as dense kv)
+            draft=(engine.make_cache(self.draft_cfg, n, self.max_len)
+                   if self.draft_cfg is not None else None),
+            slot_accepted=jnp.zeros((n,), jnp.int32),
+            slot_windows=jnp.zeros((n,), jnp.int32))
         if self.rules is not None and self.mesh is not None \
                 and self.mesh.size > 1:
             shd = pool_shardings(self.cfg, n, self.max_len, cap,
                                  self.rules, self.mesh, kv=self.kv,
                                  kv_block=self.kv_block,
                                  kv_blocks=self.kv_blocks,
-                                 prompt_len=pbuf, prefix_len=pfx)
+                                 prompt_len=pbuf, prefix_len=pfx,
+                                 draft_cfg=self.draft_cfg)
             pool = jax.tree.map(jax.device_put, pool, shd)
         return pool
 
@@ -717,13 +770,18 @@ class DecodeScheduler:
         kv_key = self._kv_key
         chunked = self.prefill == "chunked"
         C = self.chunk_tokens
+        spec = self.speculative
+        d_cfg = self.draft_cfg
+        prefix_len = self.prefix_len
         if chunked:
             stream = self.prompt_len + self.prefix_len
+            # A valid bound for the speculative path too: every verify
+            # window emits AT LEAST one token (acceptance only adds).
             max_iters = cap + -(-stream // C) + 1
         else:
             max_iters = cap
 
-        def chunk_fn(params, p: SlotPool) -> SlotPool:
+        def chunk_fn(params, dparams, p: SlotPool) -> SlotPool:
             """Advance every PREFILLING slot by one <=C-token chunk.
 
             ``engine.prefill_chunk`` writes the chunk's K/V at each
@@ -738,13 +796,23 @@ class DecodeScheduler:
             logits, cache = engine.prefill_chunk(
                 params, cfg, p.prompt, p.cache, p.pf_pos, rules,
                 chunk=C, mask=p.prefilling, prefix_embeds=p.prefix)
+            draft = p.draft
+            if d_cfg is not None:
+                # The draft model prefills the same prompt stream into
+                # ITS cache, riding the same pf_pos window (its logits
+                # are discarded — the first token comes from the
+                # target). Cost scales with the draft's size, which is
+                # small by construction.
+                _, draft = engine.prefill_chunk(
+                    dparams, d_cfg, p.prompt, draft, p.pf_pos, rules,
+                    chunk=C, mask=p.prefilling)
             fin = p.prefilling & (p.pf_pos + C >= p.plen)
             last = jnp.clip(p.plen - 1 - p.pf_pos, 0, C - 1)
             k0 = sampling_lib.step_keys(p.keys, jnp.zeros((n,), jnp.int32))
             t0 = sampling_lib.sample_slots(
                 logits[jnp.arange(n), last], k0, sp)
             return dataclasses.replace(
-                p, cache=cache,
+                p, cache=cache, draft=draft,
                 next_token=jnp.where(fin, t0, p.next_token),
                 cur_len=jnp.where(fin, p.plen + 1, p.cur_len),
                 pf_pos=jnp.where(p.prefilling, p.pf_pos + C, p.pf_pos),
@@ -793,7 +861,94 @@ class DecodeScheduler:
                 slot_steps=p.slot_steps
                 + jnp.sum(emit).astype(jnp.int32))
 
-        def step(params, pool: SlotPool, want) -> SlotPool:
+        def spec_decode_fn(params, dparams, p: SlotPool) -> SlotPool:
+            """One draft-k/verify-once iteration for every running slot.
+
+            Window = ``[pending, d_1..d_k]``. ONE target forward
+            (``engine.verify_step``) writes the window's K/V at
+            ``cur_len - 1`` through the chunk path and scores all k+1
+            positions; the accepted prefix (greedy match / rejection
+            sampling — ``speculative.accept``) is emitted in-graph and
+            ``cur_len`` advances by ``accepted + 1``. Rejected drafts
+            are NOT physically rolled back: the stale lanes sit at
+            positions >= the new ``cur_len - 1``, inside the region the
+            NEXT window rewrites before attending (k+1 writes cover at
+            most k stale lanes), and a paged row's over-budget lanes
+            route to the drop index. A slot whose accepted prefix
+            contains EOS emits only up to it, retires, and frees its
+            blocks in-graph THIS iteration — rejected drafts past EOS
+            never burn a phantom iteration.
+            """
+            k = spec.k
+            emit = p.active
+            row = jnp.arange(n)
+            t0 = p.next_token
+            if d_cfg is None:
+                drafts = spec_lib.draft_ngram(
+                    p.prompt, p.plen - prefix_len, p.out, p.n_emitted,
+                    t0, k=k, ngram=spec.ngram)
+                draft = p.draft
+            else:
+                # k+1 cheap draft decode steps: feed the window
+                # sequentially so the draft cache's valid prefix ends
+                # exactly at the window end — next iteration's window
+                # re-feeds (and rewrites) everything past the accept
+                # point, keeping draft and target caches aligned
+                # without rollback.
+                draft, toks, tok = p.draft, [], t0
+                for j in range(k + 1):
+                    dl, draft = engine.decode_step(
+                        dparams, d_cfg, tok[:, None], draft,
+                        p.cur_len + j, rules, write_mask=emit)
+                    tok = jnp.argmax(dl[:, 0], axis=-1).astype(jnp.int32)
+                    if j < k:
+                        toks.append(tok)
+                drafts = jnp.stack(toks, axis=1)
+            window = jnp.concatenate([t0[:, None], drafts], axis=1)
+            logits, cache = engine.verify_step(
+                params, cfg, window, p.cache, p.cur_len, rules,
+                write_mask=emit)
+            # keys for emission indices n_emitted+1 .. n_emitted+k+1:
+            # the candidates' own indices plus the post-window pending
+            # token's (greedy ignores them)
+            wkeys = sampling_lib.window_keys(p.keys, p.n_emitted + 1,
+                                             k + 1)
+            acc, nxt = spec_lib.accept(logits, drafts, wkeys, sp)
+            # Emit min(accepted+1, room, up to first EOS) tokens.
+            jw = jnp.arange(k + 1, dtype=jnp.int32)
+            room = p.budget - p.n_emitted
+            eos_pos = jnp.min(jnp.where((window == eos_id)
+                                        & (jw[None] <= acc[:, None]),
+                                        jw[None], k + 1), axis=1)
+            m = jnp.minimum(acc + 1, jnp.minimum(room, eos_pos + 1))
+            m = jnp.where(emit, m, 0)
+            put = emit[:, None] & (jw[None] < m[:, None])
+            idx = jnp.where(put, p.n_emitted[:, None] + jw[None], cap)
+            out = p.out.at[row[:, None], idx].set(
+                jnp.where(put, window, 0), mode="drop")
+            n_emitted = p.n_emitted + m
+            last_tok = window[row, jnp.maximum(m - 1, 0)]
+            finished = emit & ((last_tok == eos_id)
+                               | (n_emitted >= p.budget))
+            active = emit & ~finished
+            if kv_key is not None:
+                cache = {**cache,
+                         kv_key: cache[kv_key].free(mask=finished)}
+            return dataclasses.replace(
+                p, cache=cache, draft=draft,
+                next_token=jnp.where(active, nxt, t0),
+                cur_len=p.cur_len + m,
+                n_emitted=n_emitted,
+                active=active,
+                done=p.done | finished,
+                out=out,
+                slot_steps=p.slot_steps
+                + jnp.sum(emit).astype(jnp.int32),
+                slot_accepted=p.slot_accepted
+                + jnp.where(emit, m - 1, 0).astype(jnp.int32),
+                slot_windows=p.slot_windows + emit.astype(jnp.int32))
+
+        def step(params, dparams, pool: SlotPool, want) -> SlotPool:
             """One device segment.
 
             ``want`` (traced scalar) is the number of free slots worth
@@ -828,13 +983,16 @@ class DecodeScheduler:
             def body_fn(p: SlotPool) -> SlotPool:
                 if chunked:
                     p = jax.lax.cond(jnp.any(p.prefilling),
-                                     lambda q: chunk_fn(params, q),
+                                     lambda q: chunk_fn(params, dparams,
+                                                        q),
                                      lambda q: q, p)
                     # decode only when someone is actually running
                     # (pure-prefill iterations skip the dispatch; a
                     # slot that just finished its chunk decodes NOW)
+                    dec = (spec_decode_fn if spec is not None
+                           else lambda pp, dd, q: decode_fn(pp, q))
                     p = jax.lax.cond(jnp.any(p.active),
-                                     lambda q: decode_fn(params, q),
+                                     lambda q: dec(params, dparams, q),
                                      lambda q: q, p)
                 else:
                     p = decode_fn(params, p)
@@ -887,7 +1045,7 @@ class DecodeScheduler:
                 np.full(n, -1, np.int32), np.zeros(n, np.int32),
                 np.zeros((n, 2), np.uint32), np.zeros(n, bool),
                 np.zeros(n, bool), prefix_embeds, frames)
-        pool = self._step_fn(self.params, pool,
+        pool = self._step_fn(self.params, self._draft_params, pool,
                              np.int32(self.n_slots + 1))
         jax.block_until_ready(pool.next_token)
         self.pool = pool
@@ -1266,7 +1424,8 @@ class DecodeScheduler:
             fresh = (min(self.admit_threshold, len(self.queue))
                      if self.queue else self.admit_threshold)
             want = self.free_slots + fresh
-        self.pool = self._step_fn(self.params, self.pool, np.int32(want))
+        self.pool = self._step_fn(self.params, self._draft_params,
+                                  self.pool, np.int32(want))
         # one post-segment sync (needed before harvest anyway); busy
         # slot-steps accumulate in-graph next to `steps`
         self.total_steps = int(self.pool.steps)
@@ -1315,3 +1474,50 @@ class DecodeScheduler:
         if self.total_steps == 0:
             return 0.0
         return self.busy_slot_steps / (self.total_steps * self.n_slots)
+
+    # ---------------- speculative-decoding stats -----------------------
+    # Accounting is EMISSION-weighted: a window's accepted count is the
+    # extra tokens it actually emitted beyond the 1/iteration baseline
+    # (post EOS/budget clamp) — the number that explains the measured
+    # speedup, not the optimistic raw greedy-match length.
+
+    @property
+    def spec_windows(self) -> int:
+        """Verify windows run (Σ over slots; 0 for non-spec pools)."""
+        if self.speculative is None:
+            return 0
+        return int(np.asarray(self.pool.slot_windows).sum())
+
+    @property
+    def accepted_tokens(self) -> int:
+        """Σ extra tokens emitted beyond one per verify window."""
+        if self.speculative is None:
+            return 0
+        return int(np.asarray(self.pool.slot_accepted).sum())
+
+    @property
+    def drafted_tokens(self) -> int:
+        """Σ drafted candidates (k per verify window)."""
+        return self.spec_windows * (self.speculative.k
+                                    if self.speculative else 0)
+
+    @property
+    def accept_rate(self) -> float:
+        """accepted_tokens / drafted_tokens (0.0 when nothing drafted)."""
+        d = self.drafted_tokens
+        return self.accepted_tokens / d if d else 0.0
+
+    @property
+    def mean_accept_len(self) -> float:
+        """Mean accepted drafts per verify window (tokens/iteration is
+        this + 1)."""
+        w = self.spec_windows
+        return self.accepted_tokens / w if w else 0.0
+
+    def slot_accept_len(self) -> np.ndarray:
+        """Per-slot mean accept length over that slot's windows."""
+        if self.speculative is None:
+            return np.zeros(self.n_slots)
+        a = np.asarray(self.pool.slot_accepted, np.float64)
+        w = np.asarray(self.pool.slot_windows, np.float64)
+        return a / np.maximum(w, 1.0)

@@ -1,0 +1,214 @@
+"""In-graph speculative decoding: draft-k / verify-once.
+
+The paper's thesis is that data-dependent control flow belongs inside
+the dataflow graph; speculative decoding is its purest serving payoff.
+Each decode iteration of the scheduler's ``core.while_loop``:
+
+1. **drafts** k candidate tokens per running slot with a cheap
+   proposer — ``draft_ngram`` (prompt-lookup over the slot's resident
+   prompt + its own emitted tokens, pure integer gathers, no model
+   forward) or a small draft model from the zoo (wired by the
+   scheduler: k+1 tiny ``decode_step``s against the draft's own cache);
+2. **verifies** all k+1 positions ``[pending, d_1..d_k]`` in ONE
+   target-model forward through the block table
+   (``engine.verify_step`` rides the chunked-prefill write path at the
+   slot's current offset; see ``models.attention.verify_attention`` for
+   why the scoring math is the decode math, not the prefill math);
+3. **accepts** a data-dependent prefix in-graph (:func:`accept`):
+   greedy match under greedy sampling — the emitted tokens are then
+   BITWISE the tokens sequential decode would emit — or
+   rejection-sampling acceptance under temperature, drawing each
+   position's randomness from the key its EMISSION index owns
+   (``sampling.window_keys``), so acceptance never perturbs the
+   request's key stream.
+
+Rejected drafts need no physical KV rollback: ``cur_len`` simply
+advances by ``accepted + 1``, and the next iteration's verify window
+starts at the new ``cur_len - 1`` — it rewrites every stale lane
+before any query can see it (the window write spans k+1 positions and
+at most k lanes are stale, all inside the window). Paged pools make
+over-allocation writes route to the drop index, and the owner-exempt
+CoW guard runs before every window write, so shared prefix blocks are
+never corrupted by rejected drafts (DESIGN.md §8.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import sampling as sampling_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Trace-time-static speculative-decoding policy.
+
+    k: drafted candidates per iteration (verify window is k+1 wide).
+    drafter: "ngram" (in-graph prompt-lookup, no extra model) or
+      "model" (a small zoo model decodes k+1 cheap steps per iteration
+      against its own cache; the scheduler takes ``draft_params`` /
+      ``draft_cfg`` — same vocab as the target, attention-decoder
+      family, no patch prefix).
+    ngram: match length for the prompt-lookup drafter (tokens of
+      trailing context that must match an earlier occurrence).
+    """
+
+    k: int = 4
+    drafter: str = "ngram"
+    ngram: int = 2
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec k must be >= 1; got {self.k}")
+        if self.drafter not in ("ngram", "model"):
+            raise ValueError(f"drafter must be 'ngram' or 'model'; "
+                             f"got {self.drafter!r}")
+        if self.ngram < 1:
+            raise ValueError(f"ngram must be >= 1; got {self.ngram}")
+
+
+def draft_ngram(prompt: jax.Array, prompt_lens: jax.Array,
+                out: jax.Array, n_emitted: jax.Array,
+                next_token: jax.Array, *, k: int,
+                ngram: int) -> jax.Array:
+    """Prompt-lookup drafter: k candidates per row, in-graph.
+
+    Per row, the lookup context is ``prompt tokens ++ emitted tokens ++
+    pending token`` (the pending token is the freshest context — it has
+    been sampled but not yet fed). The most recent earlier position
+    whose trailing ``ngram`` tokens match the context's trailing
+    ``ngram`` tokens wins, and the k tokens FOLLOWING it are proposed
+    (clamped into the context; repetition is exactly the traffic this
+    drafter accepts on). No match → propose the pending token k times
+    (a harmless low-acceptance fallback, never a correctness issue:
+    verification decides what is emitted).
+
+    prompt: (n, P) right-padded resident prompts (the chunked pool's
+    buffer); prompt_lens: (n,) TRUE token lengths (no patch prefix —
+    the drafter matches token ids only); out/(n_emitted): the pool's
+    emission buffer and counts; next_token: (n,) pending tokens.
+    Everything is integer compares and gathers — O(ctx · ngram) per
+    row, noise next to a decode step.
+    """
+    n, P = prompt.shape
+    cap = out.shape[1]
+    W = P + cap + 1
+    jj = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32)[None], (n, W))
+    pl = prompt_lens[:, None]
+    ne = n_emitted[:, None]
+    m_len = pl + ne + 1                       # context length per row
+    cp = (jnp.take_along_axis(prompt, jnp.clip(jj, 0, P - 1), axis=1)
+          if P > 0 else jnp.zeros((n, W), jnp.int32))
+    co = jnp.take_along_axis(out, jnp.clip(jj - pl, 0, cap - 1), axis=1)
+    ctx = jnp.where(jj < pl, cp,
+                    jnp.where(jj < pl + ne, co, next_token[:, None]))
+    ctx = jnp.where(jj < m_len, ctx, -1)      # -1 never matches a token
+    ok = (jj >= ngram - 1) & (jj <= m_len - 2)
+    for r in range(ngram):
+        tail_r = jnp.take_along_axis(
+            ctx, jnp.clip(m_len - 1 - r, 0, W - 1), axis=1)  # (n, 1)
+        shift_r = jnp.take_along_axis(ctx, jnp.clip(jj - r, 0, W - 1),
+                                      axis=1)
+        ok = ok & (shift_r == tail_r)
+    pbest = jnp.max(jnp.where(ok, jj, -1), axis=1)           # (n,)
+    src = jnp.clip(pbest[:, None] + 1 + jnp.arange(k, dtype=jnp.int32),
+                   0, W - 1)
+    src = jnp.minimum(src, m_len - 1)
+    props = jnp.take_along_axis(ctx, src, axis=1)
+    return jnp.where(pbest[:, None] >= 0, props,
+                     next_token[:, None]).astype(jnp.int32)
+
+
+def accept(logits: jax.Array, drafts: jax.Array, keys: jax.Array,
+           sp: sampling_lib.SamplingParams):
+    """Accept a per-row draft prefix from one verify forward.
+
+    logits: (n, k+1, V) — verify logits; position j scored the window
+    token at offset j (``[pending, d_1..d_k]``), so ``logits[:, j]`` is
+    the distribution over the token at emission index
+    ``n_emitted + j + 1``. drafts: (n, k). keys: (n, k+1, 2) per-
+    emission keys for indices ``n_emitted+1 .. n_emitted+k+1``
+    (``sampling.window_keys``; unused under greedy).
+
+    Returns ``(acc, nxt)``: acc (n,) in [0, k] — accepted draft prefix
+    length; nxt (n,) — the new pending token given that acceptance
+    (the continuation sample at the first rejected position, or the
+    bonus sample after full acceptance).
+
+    Greedy: accept while ``d_{j+1} == argmax(logits[:, j])``; the
+    emitted stream is then bitwise the sequential-decode stream (each
+    accepted position's logits saw only true accepted tokens).
+
+    Temperature: the drafter is a deterministic proposal (a point
+    mass), so rejection sampling degenerates to ``accept d with prob
+    p(d)``; on rejection the continuation is drawn from the residual
+    ``p`` with ``d``'s mass removed, renormalized — together exactly
+    ``p``, the filtered distribution ``sampling.sample`` uses
+    (``sampling.filtered_logits``). Each position's accept-uniform and
+    residual-sample use sub-streams of ITS emission key
+    (``fold_in(key_e, 0|1)``), so randomness is a pure function of
+    (request key, emission index) however drafting went.
+    """
+    n, w, _ = logits.shape
+    k = w - 1
+    row = jnp.arange(n)
+    if sp.greedy:
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # (n, k+1)
+        match = (drafts == g[:, :k]).astype(jnp.int32)
+        acc = jnp.cumprod(match, axis=1).sum(axis=1)
+        return acc, g[row, acc]
+    f = sampling_lib.filtered_logits(logits, sp)             # (n, k+1, V)
+    p = jax.nn.softmax(f, axis=-1)
+    p_draft = jnp.take_along_axis(p[:, :k], drafts[..., None],
+                                  axis=-1)[..., 0]           # (n, k)
+    u = jax.vmap(jax.vmap(
+        lambda kk: jax.random.uniform(jax.random.fold_in(kk, 0))))(
+        keys[:, :k])                                         # (n, k)
+    acc = jnp.cumprod((u < p_draft).astype(jnp.int32), axis=1).sum(axis=1)
+    # Continuation candidates for every possible stop position, then
+    # select by acc: residual resample where a draft was rejected,
+    # plain sample after full acceptance.
+    resid = jnp.where(jax.nn.one_hot(drafts, f.shape[-1], dtype=bool),
+                      -jnp.inf, f[:, :k])
+    cand = jnp.concatenate([resid, f[:, k:]], axis=1)        # (n, k+1, V)
+    nxt_all = jax.vmap(jax.vmap(
+        lambda kk, ll: jax.random.categorical(
+            jax.random.fold_in(kk, 1), ll)))(keys, cand)
+    return acc, nxt_all[row, acc].astype(jnp.int32)
+
+
+def validate(spec: SpecConfig, cfg, prefill: str,
+             draft_cfg: Optional[Any], draft_params,
+             prefix_len: int) -> None:
+    """Scheduler-construction checks for a speculative pool."""
+    if prefill != "chunked":
+        raise ValueError(
+            "speculative decoding requires prefill='chunked': the "
+            "drafter reads the pool's resident prompt buffer and "
+            "verification rides the chunked write path (per-row "
+            "offset windows), neither of which the one-shot pool has")
+    if spec.drafter == "model":
+        if draft_cfg is None or draft_params is None:
+            raise ValueError("drafter='model' needs draft_params and "
+                             "draft_cfg")
+        if draft_cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"draft model must be an attention-decoder LM "
+                f"(dense/moe); got family {draft_cfg.family!r}")
+        if draft_cfg.vocab != cfg.vocab:
+            raise ValueError(
+                f"draft vocab ({draft_cfg.vocab}) must equal the "
+                f"target vocab ({cfg.vocab}): drafted ids are fed "
+                f"straight to the target verifier")
+        if prefix_len:
+            raise ValueError(
+                "drafter='model' does not support a patch prefix "
+                "(the draft model cannot consume the target's patch "
+                "embeds); use drafter='ngram' for VLM pools")
+    elif draft_cfg is not None or draft_params is not None:
+        raise ValueError("draft_params/draft_cfg given but "
+                         "spec.drafter != 'model'")

@@ -1,0 +1,314 @@
+"""In-graph speculative decoding: draft-k / verify-once (DESIGN.md §8.4).
+
+Acceptance invariant: GREEDY speculative decode is BIT-IDENTICAL to
+non-speculative decode, request by request — across dense/MoE/VLM
+families through the scheduler with queueing, across k, both KV
+layouts, both attention impls, and both drafters (a rejected draft
+costs iterations, never correctness). Plus the n-gram drafter units,
+the emission-index PRNG regression, sampled-mode determinism, the
+EOS-mid-window retirement path, and the construction-time validation
+errors.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.serve import sampling as sampling_lib
+from repro.serve import scheduler as sched_lib
+from repro.serve import speculative as spec_lib
+
+KEY = jax.random.PRNGKey(21)
+
+
+def _drive(params, cfg, prompts, spec=None, *, n_slots=2, max_new=8,
+           eos_id=1, kv="paged", prefix_len=0, prefix_embeds=None,
+           sampling=None, seed=0, draft_params=None, draft_cfg=None,
+           attn_impl=None):
+    """Submit all prompts (queueing when > n_slots), drain, return
+    ({rid: tokens}, scheduler)."""
+    if attn_impl is not None:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    kw = {}
+    if sampling is not None:
+        kw["sampling"] = sampling
+    sched = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=n_slots, prompt_len=16, max_new_cap=max_new,
+        eos_id=eos_id, kv=kv, kv_block=4, prefix_len=prefix_len,
+        prefill="chunked", chunk_tokens=5, seed=seed, speculative=spec,
+        draft_params=draft_params, draft_cfg=draft_cfg, **kw)
+    for b, p in enumerate(prompts):
+        sched.submit(np.asarray(p)[None, :], max_new=max_new,
+                     request_id=b,
+                     prefix_embeds=(prefix_embeds[b:b + 1]
+                                    if prefix_embeds is not None
+                                    else None))
+    out = {}
+    while sched.pending:
+        for f in sched.step():
+            out[f.request_id] = f.tokens
+    return out, sched
+
+
+def _prompts(cfg, n, rng):
+    return [rng.integers(2, cfg.vocab, size=16).astype(np.int32)
+            for _ in range(n)]
+
+
+# --------------- greedy bit-identity through the scheduler ------------------
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "dbrx-132b",
+                                  "internvl2-1b"])
+def test_bit_identical_across_families(arch):
+    """Dense/MoE/VLM with queueing (5 requests into 2 slots): greedy
+    speculative tokens equal the non-speculative run for every
+    request, windows actually ran, and the pool drains clean."""
+    cfg = get_config(arch, smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    rng = np.random.default_rng(2)
+    prompts = _prompts(cfg, 5, rng)
+    prefix_len, pe = 0, None
+    if cfg.family == "vlm":
+        prefix_len = cfg.n_patches
+        pe = jax.random.normal(
+            KEY, (len(prompts), cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    spec = spec_lib.SpecConfig(k=3, drafter="ngram", ngram=2)
+    off, _ = _drive(params, cfg, prompts, prefix_len=prefix_len,
+                    prefix_embeds=pe)
+    on, s = _drive(params, cfg, prompts, spec, prefix_len=prefix_len,
+                   prefix_embeds=pe)
+    assert on.keys() == off.keys()
+    for rid in off:
+        np.testing.assert_array_equal(on[rid], off[rid])
+    assert s.spec_windows > 0
+    assert s.drafted_tokens == 3 * s.spec_windows
+    assert s.free_blocks == s.kv_blocks
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 7])
+def test_bit_identical_across_k(smollm, k):
+    """The window width is a pure throughput knob: any k emits the
+    same greedy stream."""
+    cfg, params = smollm
+    prompts = _prompts(cfg, 3, np.random.default_rng(3))
+    off, _ = _drive(params, cfg, prompts)
+    on, s = _drive(params, cfg, prompts,
+                   spec_lib.SpecConfig(k=k, drafter="ngram", ngram=1))
+    for rid in off:
+        np.testing.assert_array_equal(on[rid], off[rid])
+    assert s.spec_windows > 0
+
+
+def test_bit_identical_dense_kv(smollm):
+    """Speculation composes with the dense KV layout too (the verify
+    write path is the cache view's write_chunk either way)."""
+    cfg, params = smollm
+    prompts = _prompts(cfg, 3, np.random.default_rng(4))
+    off, _ = _drive(params, cfg, prompts, kv="dense")
+    on, s = _drive(params, cfg, prompts,
+                   spec_lib.SpecConfig(k=3, drafter="ngram", ngram=2),
+                   kv="dense")
+    for rid in off:
+        np.testing.assert_array_equal(on[rid], off[rid])
+    assert s.spec_windows > 0
+
+
+def test_bit_identical_pallas_path(smollm):
+    """attn_impl='pallas' + paged: drafts verify through flash_verify
+    (the chunk kernel) and decode through the paged-attention kernel.
+    The comparison is pallas-speculative vs pallas-sequential — the
+    bitwise guarantee holds WITHIN an attention impl (the xla gather
+    verify is literally the decode math; the two Pallas kernels agree
+    here too on CPU interpret). Cross-impl (pallas vs xla) logits
+    differ by bf16 accumulation-order noise in BOTH modes, which can
+    flip greedy near-ties on random weights — that closeness bound is
+    the kernel suite's job (tests/kernels/test_verify_window.py)."""
+    cfg, params = smollm
+    prompts = _prompts(cfg, 3, np.random.default_rng(5))
+    off, _ = _drive(params, cfg, prompts, attn_impl="pallas")
+    on, s = _drive(params, cfg, prompts,
+                   spec_lib.SpecConfig(k=3, drafter="ngram", ngram=2),
+                   attn_impl="pallas")
+    assert s.attn_impl.startswith("pallas-paged:")
+    for rid in off:
+        np.testing.assert_array_equal(on[rid], off[rid])
+    assert s.spec_windows > 0
+
+
+def test_bit_identical_model_drafter(smollm):
+    """A draft MODEL rides its own slot-aligned cache: k+1 cheap
+    decode steps per iteration propose the window. The draft here is
+    an independently initialized 1-layer clone — its proposals are
+    mostly wrong, which must cost iterations, never correctness."""
+    cfg, params = smollm
+    draft_cfg = dataclasses.replace(cfg, n_layers=1)
+    draft_params = model_zoo.init_params(draft_cfg,
+                                         jax.random.PRNGKey(99))
+    prompts = _prompts(cfg, 3, np.random.default_rng(6))
+    off, _ = _drive(params, cfg, prompts)
+    on, s = _drive(params, cfg, prompts,
+                   spec_lib.SpecConfig(k=2, drafter="model"),
+                   draft_params=draft_params, draft_cfg=draft_cfg)
+    for rid in off:
+        np.testing.assert_array_equal(on[rid], off[rid])
+    assert s.spec_windows > 0
+    assert s.free_blocks == s.kv_blocks
+
+
+def test_eos_mid_window_retires_same_iteration(smollm):
+    """EOS landing INSIDE an accepted prefix: the slot emits only up
+    to EOS, retires, and frees its blocks in the same iteration — and
+    the stream equals the non-speculative run with the same eos_id."""
+    cfg, params = smollm
+    prompts = _prompts(cfg, 4, np.random.default_rng(7))
+    # pick an eos that actually fires mid-stream: a token the free
+    # run emits at position >= 1
+    free, _ = _drive(params, cfg, prompts, eos_id=-1)
+    eos = int(free[0][2])
+    spec = spec_lib.SpecConfig(k=4, drafter="ngram", ngram=1)
+    off, _ = _drive(params, cfg, prompts, eos_id=eos)
+    on, s = _drive(params, cfg, prompts, spec, eos_id=eos)
+    assert on.keys() == off.keys()
+    for rid in off:
+        np.testing.assert_array_equal(on[rid], off[rid])
+    # the chosen eos really did retire someone early
+    assert any(len(t) < 8 for t in on.values())
+    assert s.free_blocks == s.kv_blocks
+
+
+# ----------------------- sampled-mode determinism ---------------------------
+
+def test_sampled_deterministic_and_slot_count_invariant(smollm):
+    """Temperature sampling under speculation: randomness is a pure
+    function of (request key, emission index) — the same run repeats
+    exactly, and the outputs don't depend on how many slots the pool
+    happens to have (admission order/slot assignment shifts, keys
+    don't)."""
+    cfg, params = smollm
+    prompts = _prompts(cfg, 4, np.random.default_rng(8))
+    sp = sampling_lib.SamplingParams(temperature=0.8, top_k=0)
+    spec = spec_lib.SpecConfig(k=3, drafter="ngram", ngram=2)
+    a, sa = _drive(params, cfg, prompts, spec, sampling=sp, seed=5)
+    b, _ = _drive(params, cfg, prompts, spec, sampling=sp, seed=5)
+    c, _ = _drive(params, cfg, prompts, spec, sampling=sp, seed=5,
+                  n_slots=3)
+    assert a.keys() == b.keys() == c.keys()
+    for rid in a:
+        np.testing.assert_array_equal(a[rid], b[rid])
+        np.testing.assert_array_equal(a[rid], c[rid])
+    assert sa.spec_windows > 0
+
+
+def test_window_keys_are_emission_index_keys():
+    """Regression pin: ``window_keys(keys, first, W)[:, j]`` IS
+    ``step_keys(keys, first + j)`` — the verify window consumes
+    exactly the keys sequential decode would, so acceptance length
+    never shifts later randomness."""
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    for first in ([0, 0, 0, 0], [1, 5, 17, 63]):
+        first = jnp.asarray(first, jnp.int32)
+        wk = sampling_lib.window_keys(keys, first, 6)
+        assert wk.shape == (4, 6, 2)
+        for j in range(6):
+            np.testing.assert_array_equal(
+                np.asarray(wk[:, j]),
+                np.asarray(sampling_lib.step_keys(keys, first + j)))
+
+
+# --------------------------- drafter units ----------------------------------
+
+def test_draft_ngram_continues_repetition():
+    """On a periodic stream the prompt-lookup drafter proposes the
+    exact continuation, through the prompt/output seam."""
+    P = 8
+    pat = lambda ph, n: (2 + (ph + np.arange(n)) % P).astype(np.int32)
+    prompt = pat(0, 16)[None]
+    out = np.full((1, 32), -1, np.int32)
+    for ne in (0, 3, 9):
+        o = out.copy()
+        o[0, :ne] = pat(16, ne)
+        t0 = np.asarray([pat(16 + ne, 1)[0]], np.int32)
+        props = spec_lib.draft_ngram(
+            jnp.asarray(prompt), jnp.asarray([16]), jnp.asarray(o),
+            jnp.asarray([ne]), jnp.asarray(t0), k=4, ngram=2)
+        np.testing.assert_array_equal(np.asarray(props)[0],
+                                      pat(16 + ne + 1, 4))
+
+
+def test_draft_ngram_no_match_falls_back_to_pending():
+    """All-distinct context: no earlier occurrence of the tail n-gram,
+    so the fallback proposes the pending token k times."""
+    prompt = jnp.arange(2, 18, dtype=jnp.int32)[None]     # 16 distinct
+    out = jnp.full((1, 8), -1, jnp.int32)
+    t0 = jnp.asarray([99], jnp.int32)
+    props = spec_lib.draft_ngram(prompt, jnp.asarray([16]), out,
+                                 jnp.asarray([0]), t0, k=3, ngram=2)
+    np.testing.assert_array_equal(np.asarray(props)[0], [99, 99, 99])
+
+
+def test_draft_ngram_clamps_proposals_into_context():
+    """A match close to the context end clamps its k proposals to the
+    last real token instead of reading pad lanes."""
+    # context: 5 6 7 | 5 6  -> tail (5,6) matches at position 1;
+    # proposals start at ctx[2] = 7, then clamp to ctx[m_len-1] = 6
+    prompt = jnp.asarray([[5, 6, 7, 5]], jnp.int32)
+    out = jnp.full((1, 8), -1, jnp.int32)
+    props = spec_lib.draft_ngram(prompt, jnp.asarray([4]), out,
+                                 jnp.asarray([0]),
+                                 jnp.asarray([6], jnp.int32),
+                                 k=4, ngram=2)
+    np.testing.assert_array_equal(np.asarray(props)[0], [7, 5, 6, 6])
+
+
+# ---------------------- construction-time validation ------------------------
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        spec_lib.SpecConfig(k=0)
+    with pytest.raises(ValueError, match="drafter"):
+        spec_lib.SpecConfig(drafter="oracle")
+    with pytest.raises(ValueError, match="ngram"):
+        spec_lib.SpecConfig(ngram=0)
+
+
+def test_scheduler_rejects_bad_spec_combos(smollm):
+    cfg, params = smollm
+    spec = spec_lib.SpecConfig(k=2)
+    with pytest.raises(ValueError, match="chunked"):
+        sched_lib.DecodeScheduler(params, cfg, n_slots=2, prompt_len=16,
+                                  max_new_cap=4, eos_id=1, kv="paged",
+                                  kv_block=4, speculative=spec)
+    with pytest.raises(ValueError, match="draft_params"):
+        sched_lib.DecodeScheduler(params, cfg, n_slots=2, prompt_len=16,
+                                  max_new_cap=4, eos_id=1, kv="paged",
+                                  kv_block=4, prefill="chunked",
+                                  chunk_tokens=5,
+                                  speculative=spec_lib.SpecConfig(
+                                      k=2, drafter="model"))
+    with pytest.raises(ValueError, match="drafter != 'model'"):
+        sched_lib.DecodeScheduler(params, cfg, n_slots=2, prompt_len=16,
+                                  max_new_cap=4, eos_id=1, kv="paged",
+                                  kv_block=4, prefill="chunked",
+                                  chunk_tokens=5, speculative=spec,
+                                  draft_params=params, draft_cfg=cfg)
+
+
+def test_validate_draft_model_constraints(smollm):
+    cfg, params = smollm
+    spec = spec_lib.SpecConfig(k=2, drafter="model")
+    bad_vocab = dataclasses.replace(cfg, vocab=cfg.vocab + 8)
+    with pytest.raises(ValueError, match="vocab"):
+        spec_lib.validate(spec, cfg, "chunked", bad_vocab, params, 0)
+    with pytest.raises(ValueError, match="patch prefix"):
+        spec_lib.validate(spec, cfg, "chunked", cfg, params, 4)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_config("smollm-135m", smoke=True)
+    return cfg, model_zoo.init_params(cfg, KEY)

@@ -22,7 +22,7 @@ def main() -> None:
                    bench_loop_scaling, bench_memory_swap,
                    bench_model_parallel, bench_paged_attention,
                    bench_paged_kv, bench_parallel_iterations,
-                   bench_prefix_cache, bench_serving,
+                   bench_prefix_cache, bench_serving, bench_slo,
                    bench_spec_decode, bench_static_vs_dynamic,
                    roofline_report)
 
@@ -40,6 +40,7 @@ def main() -> None:
         ("ChunkedPrefill", bench_chunked_prefill),
         ("PrefixCache", bench_prefix_cache),
         ("SpecDecode", bench_spec_decode),
+        ("SLO", bench_slo),
         ("Roofline", roofline_report),
     ]
     ap = argparse.ArgumentParser()

@@ -168,6 +168,60 @@ def run_continuous(args, cfg, params, workload):
             "mean_accept_len": sched.mean_accept_len}
 
 
+def run_stream(args, cfg, params, workload):
+    """Asyncio streaming front-end over the SLO scheduler: every Nth
+    request (``--hi-every``) is submitted as the *interactive* class,
+    the rest as *batch*; under overload the SLO layer preempts batch
+    residents so interactive TTFT holds (DESIGN.md §8.5). Reports
+    per-class p50/p99 TTFT/ITL from ``SLOScheduler.json_summary``."""
+    import asyncio
+
+    from repro.serve import frontend as fe
+    from repro.serve import slo as slo_lib
+
+    cap = max(m for _, m in workload)
+    sp = sampling.SamplingParams(temperature=args.temperature,
+                                 top_k=args.top_k)
+    sched = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=args.slots, prompt_len=args.prompt_len,
+        max_new_cap=cap, eos_id=args.eos_id, sampling=sp, seed=args.seed,
+        kv=args.kv, kv_block=args.kv_block, kv_blocks=args.kv_blocks,
+        prefill=args.prefill, chunk_tokens=args.chunk_tokens,
+        prefix_cache=args.prefix_cache)
+    sched.warmup()
+    slo = slo_lib.SLOScheduler(sched, segment_steps=args.segment_steps)
+    front = fe.StreamingFrontend(slo, max_inflight=args.max_inflight)
+    rng = np.random.default_rng(args.seed)
+    pool_n = args.prompt_pool or len(workload)
+    pool = [rng.integers(2, cfg.vocab,
+                         (1, args.prompt_len)).astype(np.int32)
+            for _ in range(pool_n)]
+
+    async def client(i, arrival, max_new):
+        await asyncio.sleep(arrival)
+        klass = ("interactive" if args.hi_every
+                 and i % args.hi_every == 0 else "batch")
+        toks = 0
+        async for ev in front.stream(pool[i % pool_n], max_new=max_new,
+                                     slo_class=klass, request_id=i):
+            if ev["event"] == "token":
+                toks += len(ev["tokens"])
+        return toks
+
+    async def drive():
+        return await asyncio.gather(*[
+            asyncio.create_task(client(i, a, m))
+            for i, (a, m) in enumerate(workload)])
+
+    t0 = time.perf_counter()
+    tok_counts = asyncio.run(drive())
+    wall = time.perf_counter() - t0
+    summary = slo.json_summary()
+    summary["wall_s"] = wall
+    summary["tokens"] = int(sum(tok_counts))
+    return summary
+
+
 def run_batch_sync(args, cfg, params, workload):
     """Back-to-back batch-synchronous generate at equal slot count.
 
@@ -287,7 +341,28 @@ def main():
                          "distinct prompts (0 = all distinct); the "
                          "repeated-prompt traffic --prefix-cache serves")
     ap.add_argument("--compare", action="store_true",
-                    help="also run the batch-synchronous baseline")
+                    help="also run the batch-synchronous baseline; with "
+                         "--spec-k / --prefix-cache ALSO re-runs the "
+                         "continuous path with that feature off and "
+                         "prints both paths' accept/hit stats side by "
+                         "side")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the asyncio streaming front-end "
+                         "(repro.serve.frontend) over the SLO scheduler: "
+                         "per-request SSE-shaped token streams, priority "
+                         "classes (--hi-every), block-level preemption "
+                         "under overload; reports per-class p50/p99 "
+                         "TTFT/ITL instead of aggregate latency")
+    ap.add_argument("--segment-steps", type=int, default=8,
+                    help="--stream: in-graph iterations per SLO round "
+                         "(token surfacing / preemption granularity)")
+    ap.add_argument("--max-inflight", type=int, default=64,
+                    help="--stream: admission-semaphore width "
+                         "(backpressure at the front door)")
+    ap.add_argument("--hi-every", type=int, default=4,
+                    help="--stream: every Nth request is the "
+                         "'interactive' (preempting) class; 0 = all "
+                         "batch")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -295,6 +370,30 @@ def main():
         cfg = dataclasses.replace(cfg, attn_impl=args.attn_impl)
     params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
     workload = build_workload(args, np.random.default_rng(args.seed))
+
+    if args.stream:
+        s = run_stream(args, cfg, params, workload)
+        print(f"[serve] stream: {s['tokens']} tokens in "
+              f"{s['wall_s']:.2f}s | {s['preemptions']} preemptions, "
+              f"{s['replay_mismatches']} replay mismatches, "
+              f"{s['completed']} completed "
+              f"({s['total_steps']} device steps, "
+              f"segment={s['segment_steps']})")
+        for name, c in s["classes"].items():
+            tw, iw = c["ttft_wall_s"], c["itl_wall_s"]
+            ts, is_ = c["ttft_steps"], c["itl_steps"]
+            print(f"[serve]   {name} (prio {c['priority']}): "
+                  f"{c['completed']} done, "
+                  f"{c['preempted_times']} preempted | "
+                  f"TTFT p50 {ts['p50'] or 0:.0f}/p99 "
+                  f"{ts['p99'] or 0:.0f} steps "
+                  f"({(tw['p50'] or 0) * 1e3:.0f}/"
+                  f"{(tw['p99'] or 0) * 1e3:.0f}ms) | "
+                  f"ITL p50 {is_['p50'] or 0:.1f}/p99 "
+                  f"{is_['p99'] or 0:.1f} steps "
+                  f"({(iw['p50'] or 0) * 1e3:.0f}/"
+                  f"{(iw['p99'] or 0) * 1e3:.0f}ms)")
+        return
 
     cont = run_continuous(args, cfg, params, workload)
     print(f"[serve] continuous (decode {cont['attn_impl']}, "
@@ -319,6 +418,41 @@ def main():
               f"mean accept length "
               f"{cont['mean_accept_len']:.2f}")
     if args.compare:
+        if args.spec_k or args.prefix_cache:
+            # feature-off continuous baseline: same scheduler, same
+            # workload, spec/prefix off — the side-by-side isolates
+            # what the feature buys (the batch-sync baseline below
+            # can't run either feature, so comparing only against it
+            # silently dropped these stats)
+            off = argparse.Namespace(**vars(args))
+            off.spec_k, off.prefix_cache = 0, False
+            base = run_continuous(off, cfg, params, workload)
+            feats = "+".join(
+                (["spec-k%d" % args.spec_k] if args.spec_k else [])
+                + (["prefix-cache"] if args.prefix_cache else []))
+            print(f"[serve] continuous feature comparison "
+                  f"({feats} vs off):")
+            rows = [("tok/s", f"{cont['tok_s']:.1f}",
+                     f"{base['tok_s']:.1f}"),
+                    ("p99 latency", f"{cont['p99_s'] * 1e3:.0f}ms",
+                     f"{base['p99_s'] * 1e3:.0f}ms"),
+                    ("device steps", str(cont["steps"]),
+                     str(base["steps"]))]
+            if args.spec_k:
+                rows += [("accept rate",
+                          f"{cont['accept_rate'] * 100:.0f}% "
+                          f"({cont['accepted_tokens']}/"
+                          f"{cont['drafted_tokens']})", "n/a"),
+                         ("mean accept len",
+                          f"{cont['mean_accept_len']:.2f}", "n/a")]
+            if args.prefix_cache:
+                rows += [("prefix hit blocks",
+                          str(cont["prefix_hit_blocks"]), "n/a"),
+                         ("prefix evictions",
+                          str(cont["prefix_evictions"]), "n/a")]
+            for name, on_v, off_v in rows:
+                print(f"[serve]   {name:>18}: {on_v:>16} | "
+                      f"{off_v:>10} (off)")
         sync = run_batch_sync(args, cfg, params, workload)
         print(f"[serve] batch-sync ({sync['attn_impl']}; offline, no "
               f"arrival gating): "

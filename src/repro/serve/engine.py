@@ -780,7 +780,6 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, max_new: int,
     else:
         _WRAPPER_SCHEDULERS.move_to_end(key)
         sched.params = params   # fresh weights reuse the cached traces
-    steps_before = sched.total_steps
     prompt_np = np.asarray(prompt)   # one transfer, sliced host-side
     for b in range(B):
         sched.submit(
@@ -792,7 +791,9 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, max_new: int,
     toks = np.full((B, max_new), eos_id, dtype=np.int32)
     for f in finished:
         toks[f.request_id, :f.length] = f.tokens
+    # run_until_drained resets stats at entry (idle pool), so
+    # total_steps already counts exactly this run's iterations
     return _result_from_tokens(jnp.asarray(toks), eos_id,
-                               sched.total_steps - steps_before,
+                               sched.total_steps,
                                attn_impl=sched.attn_impl,
                                prefill_impl=sched.prefill_impl)

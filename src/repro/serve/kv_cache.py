@@ -415,6 +415,16 @@ class KVCache:
         share storage)."""
         return self
 
+    def reclaimable(self) -> jax.Array:
+        """(n_rows,) int32 — blocks freeing each row would actually
+        return to the pool: table entries whose block has
+        ``refcount == 1`` (this row is the last holder — shared or
+        index-pinned blocks survive a ``free``). The SLO layer's
+        victim-selection signal: a row full of shared prefix blocks
+        reclaims almost nothing and is a poor preemption victim.
+        Dense rows hold no pool blocks → zeros."""
+        return jnp.zeros((self.n_rows,), jnp.int32)
+
     # ---- placement ----
     def shardings(self, rules, mesh=None, row_axis: str = sh.BATCH):
         """Matching-structure pytree of ``NamedSharding``s."""
@@ -544,6 +554,17 @@ class PagedKVCache(KVCache):
     @property
     def free_count(self) -> jax.Array:
         return jnp.sum(self.refcount == 0).astype(jnp.int32)
+
+    def reclaimable(self) -> jax.Array:
+        """(n_rows,) int32 — per-row count of table entries that are
+        this row's EXCLUSIVELY: allocated (``table >= 0``) and backed
+        by a block with ``refcount == 1``. Freeing the row returns
+        exactly these blocks to the pool (shared/pinned blocks only
+        drop a reference), so this is the honest "what does preempting
+        row r buy" number."""
+        ref = jnp.where(self.table >= 0,
+                        self.refcount[jnp.clip(self.table, 0, None)], 0)
+        return jnp.sum(ref == 1, axis=1).astype(jnp.int32)
 
     @property
     def layers(self):

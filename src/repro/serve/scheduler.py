@@ -115,6 +115,11 @@ from . import engine, kv_cache as kvc, sampling as sampling_lib
 from . import speculative as spec_lib
 
 
+# "no per-segment iteration cap": large enough that the free-slot
+# predicate always fires first (int32-safe — steps deltas stay below it)
+_NO_STEP_CAP = np.int32(2**31 - 1)
+
+
 # =========================== pool state =====================================
 
 @jax.tree_util.register_pytree_node_class
@@ -160,6 +165,10 @@ class SlotPool:
     slot_accepted: Any = None  # (n,) int32 — Σ extra tokens emitted
                              # beyond 1/iteration (speculative pools)
     slot_windows: Any = None   # (n,) int32 — Σ verify windows run
+    priority: Any = None     # (n,) int32 — request priority class
+                             # (lower = more urgent; SLO layer)
+    deadline: Any = None     # (n,) float32 — request deadline (host
+                             # clock seconds; +inf = none)
 
     def tree_flatten(self):
         return (self.cache, self.next_token, self.cur_len, self.n_emitted,
@@ -167,7 +176,7 @@ class SlotPool:
                 self.keys, self.out, self.steps, self.slot_steps,
                 self.prompt, self.plen, self.pf_pos, self.prefilling,
                 self.prefix, self.draft, self.slot_accepted,
-                self.slot_windows), None
+                self.slot_windows, self.priority, self.deadline), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -189,6 +198,30 @@ class _Queued:
     prompt: Any              # (1, L) int32, 1 <= L <= prompt_len
     max_new: int
     key: Any                 # (2,) uint32 or None (derive from rid)
+    prefix_embeds: Any = None
+    frames: Any = None
+    priority: int = 0        # lower = more urgent (SLO layer)
+    deadline: float = float("inf")
+
+
+@dataclasses.dataclass
+class PreemptedRequest:
+    """A resident request evicted by ``preempt_slots``: everything
+    needed to re-queue it for recompute-from-prompt, plus the host-side
+    snapshot of what it had already emitted (a streaming front-end must
+    not re-deliver those tokens; a replay's regenerated prefix must
+    MATCH them bit-for-bit — greedy decode and the emission-index PRNG
+    keying both guarantee it)."""
+
+    request_id: int
+    prompt: np.ndarray       # (1, L) int32 — the original prompt
+    max_new: int             # the original budget (full recompute)
+    key: Any                 # the original explicit key (None = derived
+                             # from request_id, so a replay re-derives
+                             # the identical key)
+    tokens: np.ndarray       # (n_emitted,) — snapshot at preemption
+    priority: int = 0
+    deadline: float = float("inf")
     prefix_embeds: Any = None
     frames: Any = None
 
@@ -347,7 +380,8 @@ def pool_shardings(cfg, n_slots: int, max_len: int, max_new_cap: int,
             cache=engine.make_cache(draft_cfg, n_slots, max_len,
                                     mode="abstract"),
             row_axis=sh.SLOT) if draft_cfg is not None else None),
-        slot_accepted=vec, slot_windows=vec)
+        slot_accepted=vec, slot_windows=vec,
+        priority=vec, deadline=vec)
 
 
 # =========================== scheduler ======================================
@@ -519,6 +553,10 @@ class DecodeScheduler:
         self._busy = np.zeros(n_slots, bool)
         self._slot_blocks = np.zeros(n_slots, np.int64)
         self._free_blocks = self.kv_blocks
+        # host copy of each resident slot's request (set at admission,
+        # cleared at harvest/preemption): preemption re-queues from it
+        # and the SLO layer reads slot→priority without a device sync
+        self._slot_req: List[Optional[_Queued]] = [None] * n_slots
         # prefix cache: host-side content-addressed index + per-slot
         # bookkeeping of matched (hit) and registered entry keys
         self.prefix_cache = bool(prefix_cache)
@@ -536,6 +574,7 @@ class DecodeScheduler:
         #                               batch can retire within one
         #                               segment, so post-harvest
         #                               active_count misses it)
+        self.preemptions = 0          # preempt_slots victims (SLO layer)
 
         self.pool = self._init_pool()
         # chunked admission runs NO model forward: assign registers +
@@ -544,6 +583,7 @@ class DecodeScheduler:
                                  if prefill == "chunked"
                                  else self._build_admit())
         self._step_fn = jax.jit(self._build_step())
+        self._preempt_fn = jax.jit(self._build_preempt())
 
     # ---------------- pool construction ----------------
 
@@ -582,7 +622,9 @@ class DecodeScheduler:
             draft=(engine.make_cache(self.draft_cfg, n, self.max_len)
                    if self.draft_cfg is not None else None),
             slot_accepted=jnp.zeros((n,), jnp.int32),
-            slot_windows=jnp.zeros((n,), jnp.int32))
+            slot_windows=jnp.zeros((n,), jnp.int32),
+            priority=jnp.zeros((n,), jnp.int32),
+            deadline=jnp.full((n,), jnp.inf, jnp.float32))
         if self.rules is not None and self.mesh is not None \
                 and self.mesh.size > 1:
             shd = pool_shardings(self.cfg, n, self.max_len, cap,
@@ -607,8 +649,8 @@ class DecodeScheduler:
         base_key = self._base_key
 
         def admit(params, pool: SlotPool, prompts, true_lens, slots, rids,
-                  max_news, keys, derive, mask, prefix_embeds, frames
-                  ) -> SlotPool:
+                  max_news, keys, derive, mask, prios, deadlines,
+                  prefix_embeds, frames) -> SlotPool:
             """Admit up to n requests in one prefill.
 
             prompts (n, Sb) right-padded to the bucket width Sb;
@@ -682,7 +724,9 @@ class DecodeScheduler:
                 done=sreg(pool.done, jnp.zeros((n,), bool)),
                 request_id=sreg(pool.request_id, rids),
                 keys=sreg(pool.keys, rkeys),
-                out=sreg(pool.out, jnp.zeros_like(pool.out)))
+                out=sreg(pool.out, jnp.zeros_like(pool.out)),
+                priority=sreg(pool.priority, prios),
+                deadline=sreg(pool.deadline, deadlines))
 
         return admit
 
@@ -699,8 +743,8 @@ class DecodeScheduler:
         base_key = self._base_key
 
         def assign(params, pool: SlotPool, prompts, plens, slots, rids,
-                   max_news, keys, derive, mask, prefix, shared, pin,
-                   pf0, evict) -> SlotPool:
+                   max_news, keys, derive, mask, prios, deadlines,
+                   prefix, shared, pin, pf0, evict) -> SlotPool:
             """Assign up to n requests into free slots.
 
             prompts (n, prompt_len) right-padded token buffers; plens
@@ -758,9 +802,53 @@ class DecodeScheduler:
                 pf_pos=sreg(pool.pf_pos, pf0),
                 prefilling=sreg(pool.prefilling, jnp.ones((n,), bool)),
                 prefix=(pool.prefix if prefix is None
-                        else sreg(pool.prefix, prefix)))
+                        else sreg(pool.prefix, prefix)),
+                priority=sreg(pool.priority, prios),
+                deadline=sreg(pool.deadline, deadlines))
 
         return assign
+
+    # ---------------- in-graph preemption -----------------------------
+
+    def _build_preempt(self):
+        """Victim eviction: free the masked slots' cache rows (the
+        refcounted ``free`` — blocks shared with other rows or pinned
+        by the prefix index survive) and return their registers to
+        FREE, all in one device dispatch. The host snapshots emitted
+        tokens BEFORE calling this and re-queues the request for
+        recompute-from-prompt; nothing is swapped out — with prefix
+        caching the replayed prompt usually maps straight back to the
+        still-pinned blocks, which is why recompute wins (DESIGN.md
+        §8.5)."""
+        kv_key = self._kv_key
+
+        def preempt(pool: SlotPool, mask, evict) -> SlotPool:
+            """mask (n,) bool — victim slots; evict (kv_blocks,) int32
+            block ids whose index pins are released in the same call
+            (a mid-prefill victim's PENDING registrations are
+            half-written and must leave the index), or None when the
+            prefix cache is off."""
+            cache = pool.cache
+            if kv_key is not None:
+                node = cache[kv_key]
+                if evict is not None:
+                    node = node.release(evict)
+                node = node.free(mask=mask)
+                cache = {**cache, kv_key: node}
+            keep = ~mask
+            return dataclasses.replace(
+                pool, cache=cache,
+                active=pool.active & keep,
+                prefilling=pool.prefilling & keep,
+                done=pool.done & keep,
+                request_id=jnp.where(mask, -1, pool.request_id),
+                budget=jnp.where(mask, 0, pool.budget),
+                n_emitted=jnp.where(mask, 0, pool.n_emitted),
+                cur_len=jnp.where(mask, 1, pool.cur_len),
+                pf_pos=jnp.where(mask, 0, pool.pf_pos),
+                plen=jnp.where(mask, 0, pool.plen))
+
+        return preempt
 
     # ---------------- in-graph decode segment -------------------------
 
@@ -948,7 +1036,8 @@ class DecodeScheduler:
                 + jnp.where(emit, m - 1, 0).astype(jnp.int32),
                 slot_windows=p.slot_windows + emit.astype(jnp.int32))
 
-        def step(params, dparams, pool: SlotPool, want) -> SlotPool:
+        def step(params, dparams, pool: SlotPool, want,
+                 max_steps) -> SlotPool:
             """One device segment.
 
             ``want`` (traced scalar) is the number of free slots worth
@@ -961,6 +1050,12 @@ class DecodeScheduler:
             (a freed slot has no successor, so retirement is no reason
             to pause; outputs wait for harvest).
 
+            ``max_steps`` (traced scalar) additionally bounds this
+            segment's iteration count: a streaming driver needs tokens
+            surfaced (and preemption decisions re-made) every few
+            iterations even when no slot frees — the host passes
+            ``2**31 - 1`` to keep the classic free-slot-only pauses.
+
             Chunked mode interleaves inside each iteration: at most
             one ``chunk_tokens`` prefill chunk for every prefilling
             slot (skipped at runtime when none is — steady-state
@@ -969,10 +1064,13 @@ class DecodeScheduler:
             prompt is being admitted — the inter-token latency bound
             the one-shot admission can't give.
             """
+            s0 = pool.steps
+
             def cond_fn(p: SlotPool):
                 busy = p.active | p.prefilling
                 idle = n - jnp.sum(busy).astype(jnp.int32)
-                return jnp.any(busy) & (idle < want)
+                return jnp.any(busy) & (idle < want) \
+                    & (p.steps - s0 < max_steps)
 
             # Entering a segment implies the host harvested the previous
             # one: clear `done` here (free, in-graph) instead of paying
@@ -1026,6 +1124,8 @@ class DecodeScheduler:
         prefix_embeds = (jnp.zeros((n, self.prefix_len,
                                     self.cfg.d_model), cdt)
                          if self.prefix_len > 0 else None)
+        prios = np.zeros(n, np.int32)
+        deadlines = np.full(n, np.inf, np.float32)
         if self.prefill == "chunked":
             shared, pin, evict = self._no_prefix_args()
             pool = self._admit_fn(
@@ -1033,8 +1133,8 @@ class DecodeScheduler:
                 np.full(n, L + self.prefix_len, np.int32),
                 np.arange(n, dtype=np.int32), np.full(n, -1, np.int32),
                 np.zeros(n, np.int32), np.zeros((n, 2), np.uint32),
-                np.zeros(n, bool), np.zeros(n, bool), prefix_embeds,
-                shared, pin, np.zeros(n, np.int32), evict)
+                np.zeros(n, bool), np.zeros(n, bool), prios, deadlines,
+                prefix_embeds, shared, pin, np.zeros(n, np.int32), evict)
         else:
             frames = (jnp.zeros((n, self.cfg.n_frames, self.cfg.d_model),
                                 cdt)
@@ -1044,9 +1144,10 @@ class DecodeScheduler:
                 np.full(n, L, np.int32), np.arange(n, dtype=np.int32),
                 np.full(n, -1, np.int32), np.zeros(n, np.int32),
                 np.zeros((n, 2), np.uint32), np.zeros(n, bool),
-                np.zeros(n, bool), prefix_embeds, frames)
+                np.zeros(n, bool), prios, deadlines, prefix_embeds,
+                frames)
         pool = self._step_fn(self.params, self._draft_params, pool,
-                             np.int32(self.n_slots + 1))
+                             np.int32(self.n_slots + 1), _NO_STEP_CAP)
         jax.block_until_ready(pool.next_token)
         self.pool = pool
 
@@ -1090,8 +1191,15 @@ class DecodeScheduler:
         return len(self.queue) + int(self._busy.sum())
 
     def submit(self, prompt, *, max_new: int, request_id: Optional[int] =
-               None, key=None, prefix_embeds=None, frames=None) -> int:
-        """Queue one request. prompt: (1, L) int32, 1 <= L <= prompt_len."""
+               None, key=None, prefix_embeds=None, frames=None,
+               priority: int = 0,
+               deadline: float = float("inf")) -> int:
+        """Queue one request. prompt: (1, L) int32, 1 <= L <= prompt_len.
+
+        ``priority`` (lower = more urgent) and ``deadline`` (host-clock
+        seconds) ride into the slot pool as carry fields; the base
+        FIFO driver ignores them — the SLO layer
+        (``repro.serve.slo``) orders and preempts by them."""
         prompt = np.asarray(prompt)
         if prompt.ndim != 2 or prompt.shape[0] != 1 or \
                 not 1 <= prompt.shape[1] <= self.prompt_len:
@@ -1143,10 +1251,15 @@ class DecodeScheduler:
         elif frames is not None:
             raise ValueError(f"frames invalid for family "
                              f"{self.cfg.family!r}")
+        if not self.queue and not self._busy.any():
+            # first submission of a fresh run on a drained scheduler:
+            # counters describe runs, not scheduler lifetimes
+            self.reset_stats()
         rid = self._next_rid if request_id is None else int(request_id)
         self._next_rid = max(self._next_rid, rid) + 1
         self.queue.append(_Queued(rid, prompt, int(max_new), key,
-                                  prefix_embeds, frames))
+                                  prefix_embeds, frames, int(priority),
+                                  float(deadline)))
         return rid
 
     def _bucket(self, length: int) -> int:
@@ -1259,12 +1372,16 @@ class DecodeScheduler:
         max_news = np.zeros(n, np.int32)
         keys = np.zeros((n, 2), np.uint32)
         derive = np.zeros(n, bool)
+        prios = np.zeros(n, np.int32)
+        deadlines = np.full(n, np.inf, np.float32)
         for i, q in enumerate(batch):
             tl = q.prompt.shape[1]
             prompts[i, :tl] = q.prompt[0]
             true_lens[i] = tl
             rids[i] = q.request_id
             max_news[i] = q.max_new
+            prios[i] = q.priority
+            deadlines[i] = q.deadline
             if q.key is None:
                 derive[i] = True
             else:
@@ -1318,7 +1435,8 @@ class DecodeScheduler:
                         regs[i].append((h, c))
             self.pool = self._admit_fn(self.params, self.pool, prompts,
                                        plens, slots, rids, max_news,
-                                       keys, derive, mask, prefix_embeds,
+                                       keys, derive, mask, prios,
+                                       deadlines, prefix_embeds,
                                        shared, pin, pf0, evict)
             if self.prefix_cache and any(regs):
                 # fill registered entries' physical ids from the device
@@ -1338,11 +1456,12 @@ class DecodeScheduler:
         else:
             self.pool = self._admit_fn(self.params, self.pool, prompts,
                                        true_lens, slots, rids, max_news,
-                                       keys, derive, mask, prefix_embeds,
-                                       frames)
+                                       keys, derive, mask, prios,
+                                       deadlines, prefix_embeds, frames)
         for i, q in enumerate(batch):
             slot = int(free[i])
             self._busy[slot] = True
+            self._slot_req[slot] = q
             need = self.blocks_for(q.prompt.shape[1], q.max_new)
             if self.prefix_cache and chunked:
                 need -= len(plans[i]["hit_keys"])     # fresh blocks only
@@ -1373,6 +1492,7 @@ class DecodeScheduler:
                 text_length=length - int(hit_eos), hit_eos=hit_eos))
             self.tokens_emitted += length
             self._busy[slot] = False
+            self._slot_req[slot] = None
             # the device freed these blocks in-graph at retirement; the
             # host mirror learns at harvest, before the next admission
             self._free_blocks += int(self._slot_blocks[slot])
@@ -1399,7 +1519,8 @@ class DecodeScheduler:
         # must not accumulate every historical token array.
         return got
 
-    def step(self, expect_arrivals: bool = False) -> List[FinishedRequest]:
+    def step(self, expect_arrivals: bool = False,
+             max_steps: Optional[int] = None) -> List[FinishedRequest]:
         """One scheduling round: admit → device segment → harvest.
 
         Returns the requests that finished this round. A round with an
@@ -1410,6 +1531,12 @@ class DecodeScheduler:
         that knows more requests are coming (an open request queue)
         passes True so the segment still returns on freed slots and a
         request arriving mid-drain isn't stuck behind the whole tail.
+
+        ``max_steps`` additionally caps this round's in-graph iteration
+        count: a streaming/SLO driver needs control back every few
+        iterations to surface tokens and revisit preemption decisions
+        even while every slot stays busy. ``None`` keeps the classic
+        free-slot-only pauses.
         """
         self._admit_queued()
         self.peak_resident = max(self.peak_resident, self.active_count)
@@ -1424,12 +1551,141 @@ class DecodeScheduler:
             fresh = (min(self.admit_threshold, len(self.queue))
                      if self.queue else self.admit_threshold)
             want = self.free_slots + fresh
+        cap = _NO_STEP_CAP if max_steps is None else np.int32(max_steps)
         self.pool = self._step_fn(self.params, self._draft_params,
-                                  self.pool, np.int32(want))
+                                  self.pool, np.int32(want), cap)
         # one post-segment sync (needed before harvest anyway); busy
         # slot-steps accumulate in-graph next to `steps`
         self.total_steps = int(self.pool.steps)
         return self._harvest()
+
+    # ---------------- preemption (SLO layer) --------------------------
+
+    def preempt_slots(self, slots) -> List[PreemptedRequest]:
+        """Evict resident requests from ``slots``, freeing their blocks.
+
+        The victims' emitted tokens are snapshotted host-side and each
+        request is returned as a :class:`PreemptedRequest` — re-queue
+        it (``resubmit``) for recompute-from-prompt: the same
+        rid-derived (or explicit) key plus emission-index PRNG keying
+        regenerates the IDENTICAL token stream, and the prefix cache
+        usually maps the replayed prompt straight back onto its
+        still-pinned blocks. Prefix-index bookkeeping: READY
+        registrations stay pinned (their cached content is valid —
+        exactly what makes the replay cheap); PENDING ones are
+        half-written and leave the index, their pins released in the
+        same device dispatch that frees the rows.
+
+        Must run between device segments (it is a host scheduling
+        action, like admission). Harvest first: ``done`` slots already
+        freed their blocks in-graph, so preempting one would
+        double-free.
+        """
+        slots = sorted({int(s) for s in np.atleast_1d(
+            np.asarray(slots, np.int64))})
+        if not slots:
+            return []
+        for s in slots:
+            if not 0 <= s < self.n_slots or not self._busy[s]:
+                raise ValueError(f"slot {s} is not resident")
+            if self._slot_req[s] is None:
+                raise ValueError(f"slot {s} has no host request record")
+        done = np.asarray(self.pool.done)
+        if done[slots].any():
+            raise RuntimeError("preempting a done (unharvested) slot "
+                               "would double-free its blocks; harvest "
+                               "first")
+        self._refresh_ready()
+        out = np.asarray(self.pool.out)
+        n_emitted = np.asarray(self.pool.n_emitted)
+        evict = None
+        if self.prefix_cache:
+            idx = self._prefix_index
+            evicted: List[int] = []
+            for s in slots:
+                for h in self._slot_regs[s]:
+                    e = idx.entries.get(h)
+                    if e is None:
+                        continue
+                    if e.ready:
+                        # valid cached content: keep it pinned so the
+                        # replay (and everyone else) hits it
+                        e.row_refs -= 1
+                    else:
+                        # mid-prefill: the block is half-written —
+                        # nobody may ever match it
+                        evicted.append(idx.evict(h))
+                        self.prefix_evictions += 1
+                for h in self._slot_hits[s]:
+                    e = idx.entries.get(h)
+                    if e is not None:
+                        e.row_refs -= 1
+                self._slot_regs[s] = []
+                self._slot_hits[s] = []
+            evict = np.full(self.kv_blocks, -1, np.int32)
+            evict[:len(evicted)] = evicted
+            # each evicted pin was the block's last extra reference on
+            # top of the row's own (freed below): fully free again
+            self._free_blocks += len(evicted)
+        mask = np.zeros(self.n_slots, bool)
+        mask[slots] = True
+        self.pool = self._preempt_fn(self.pool, mask, evict)
+        got: List[PreemptedRequest] = []
+        for s in slots:
+            q = self._slot_req[s]
+            got.append(PreemptedRequest(
+                request_id=q.request_id, prompt=q.prompt,
+                max_new=q.max_new, key=q.key,
+                tokens=out[s, :int(n_emitted[s])].copy(),
+                priority=q.priority, deadline=q.deadline,
+                prefix_embeds=q.prefix_embeds, frames=q.frames))
+            self._busy[s] = False
+            self._slot_req[s] = None
+            self._free_blocks += int(self._slot_blocks[s])
+            self._slot_blocks[s] = 0
+        self.preemptions += len(slots)
+        return got
+
+    def resubmit(self, p: PreemptedRequest) -> None:
+        """Re-queue a preempted request at the FRONT of the queue with
+        its original rid/key/priority/deadline — the replay regenerates
+        the identical stream from scratch (recompute-from-prompt)."""
+        self.queue.insert(0, _Queued(p.request_id, p.prompt, p.max_new,
+                                     p.key, p.prefix_embeds, p.frames,
+                                     p.priority, p.deadline))
+
+    # ---------------- stats lifecycle ---------------------------------
+
+    def reset_stats(self) -> None:
+        """Zero every run counter — host mirrors AND the in-graph
+        accumulators (``steps``/``slot_steps``/``slot_accepted``/
+        ``slot_windows``, zeroed by multiply — preserves device
+        placement and sharding without re-initialising the pool). A
+        reused scheduler's stats then describe one run, not the sum of
+        its history.
+
+        Called automatically when work is submitted to a fully idle,
+        fully drained scheduler — i.e. at the start of each new run —
+        so back-to-back ``run_until_drained`` calls (or ``generate``
+        wrappers) each report their own counters without the caller
+        doing anything. Manual ``step()`` driving mid-run is
+        unaffected: the scheduler is not idle then."""
+        self.total_steps = 0
+        self.tokens_emitted = 0
+        self.peak_resident = 0
+        self.prefix_hit_blocks = 0
+        self.prefix_evictions = 0
+        self.preemptions = 0
+
+        def z(a):
+            return None if a is None else a * 0
+
+        self.pool = dataclasses.replace(
+            self.pool,
+            steps=self.pool.steps * 0,
+            slot_steps=self.pool.slot_steps * 0,
+            slot_accepted=z(self.pool.slot_accepted),
+            slot_windows=z(self.pool.slot_windows))
 
     def run_until_drained(self) -> List[FinishedRequest]:
         """Drive until queue and pool are empty; returns all finished."""

@@ -1,0 +1,147 @@
+"""Full-stack composition: chunked prefill + prefix cache + speculative
+decoding active SIMULTANEOUSLY through queueing and eviction.
+
+Each serving feature was proven bit-identical in isolation
+(test_chunked_prefill, test_prefix_cache, test_speculative); this file
+asserts the composition holds — greedy tokens through the scheduler
+with all three engaged equal the sequential in-graph reference
+(``engine.generate_batch_sync``), on both KV layouts. The paged run is
+arranged so every interaction actually fires: duplicate prompts map
+pinned prefix blocks (hits), distinct prompts overflow the pin budget
+(LRU evictions), and more requests than slots exercise queueing while
+speculative windows run the decode.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.serve import engine
+from repro.serve import scheduler as sched_lib
+from repro.serve import speculative as spec_lib
+
+KEY = jax.random.PRNGKey(17)
+
+PROMPT, MAX_NEW, BLOCK, SLOTS = 16, 8, 4, 2
+# ceil((16 + 8 + 1) / 4) blocks held per resident request
+NEED = 7
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_config("smollm-135m", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _prompts(cfg):
+    """8 prompts: rid 2 repeats rid 0 (a prefix hit once rid 0's
+    registration is READY); the rest are distinct (pin pressure)."""
+    rng = np.random.default_rng(5)
+    uniq = [rng.integers(2, cfg.vocab, size=PROMPT).astype(np.int32)
+            for _ in range(7)]
+    return [uniq[0], uniq[1], uniq[0]] + uniq[2:]
+
+
+def _drain(sched, prompts):
+    for b, p in enumerate(prompts):
+        sched.submit(p[None, :], max_new=MAX_NEW, request_id=b)
+    out = {}
+    while sched.pending:
+        for f in sched.step():
+            out[f.request_id] = f
+    return out
+
+
+def _check(out, sync, n):
+    for rid in range(n):
+        f = out[rid]
+        np.testing.assert_array_equal(
+            f.tokens, np.asarray(sync.tokens[rid, :f.length]))
+        assert f.length == int(sync.lengths[rid])
+
+
+def test_all_three_paged_bit_identical(smollm):
+    """Paged pool sized to thrash: chunked prefill + prefix cache +
+    ngram speculation, 8 requests into 2 slots. Hits, evictions and
+    spec windows all fire; every stream matches the reference; the
+    drained pool's free-list accounts for surviving pins exactly."""
+    cfg, params = smollm
+    prompts = _prompts(cfg)
+    sync = engine.generate_batch_sync(
+        params, cfg, np.stack(prompts), max_new=MAX_NEW, eos_id=1)
+    sched = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=SLOTS, prompt_len=PROMPT,
+        max_new_cap=MAX_NEW, eos_id=1, kv="paged", kv_block=BLOCK,
+        kv_blocks=SLOTS * NEED + 2, prefill="chunked", chunk_tokens=5,
+        prefix_cache=True,
+        speculative=spec_lib.SpecConfig(k=3, drafter="ngram", ngram=2))
+    out = _drain(sched, prompts)
+    _check(out, sync, len(prompts))
+    assert sched.spec_windows > 0
+    assert sched.prefix_hit_blocks > 0
+    assert sched.prefix_evictions > 0
+    # free-list sanity: everything not pinned by the index came back
+    idx = sched._prefix_index
+    pinned = sum(1 for e in idx.entries.values() if e.block_id >= 0)
+    assert sched.free_blocks == sched.kv_blocks - pinned
+    assert int(sched.pool.cache[sched._kv_key].free_count) \
+        == sched.free_blocks
+
+
+def test_chunked_plus_spec_dense_bit_identical(smollm):
+    """Dense pool (prefix cache requires paged, so two of the three):
+    chunked prefill + speculation with queueing, against the same
+    reference."""
+    cfg, params = smollm
+    prompts = _prompts(cfg)
+    sync = engine.generate_batch_sync(
+        params, cfg, np.stack(prompts), max_new=MAX_NEW, eos_id=1)
+    sched = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=SLOTS, prompt_len=PROMPT,
+        max_new_cap=MAX_NEW, eos_id=1, kv="dense",
+        prefill="chunked", chunk_tokens=5,
+        speculative=spec_lib.SpecConfig(k=3, drafter="ngram", ngram=2))
+    out = _drain(sched, prompts)
+    _check(out, sync, len(prompts))
+    assert sched.spec_windows > 0
+
+
+def test_all_three_under_slo_preemption(smollm):
+    """The PR's full stack in one scenario: all three features PLUS the
+    SLO layer preempting — streams still bit-identical."""
+    from repro.serve import slo as slo_lib
+    cfg, params = smollm
+    prompts = _prompts(cfg)[:5]
+    sync = engine.generate_batch_sync(
+        params, cfg, np.stack(prompts), max_new=MAX_NEW, eos_id=1)
+
+    def make(kv_blocks):
+        return sched_lib.DecodeScheduler(
+            params, cfg, n_slots=SLOTS, prompt_len=PROMPT,
+            max_new_cap=MAX_NEW, eos_id=1, kv="paged", kv_block=BLOCK,
+            kv_blocks=kv_blocks, prefill="chunked", chunk_tokens=5,
+            prefix_cache=True,
+            speculative=spec_lib.SpecConfig(k=3, drafter="ngram",
+                                            ngram=2))
+
+    slo = slo_lib.SLOScheduler(make(SLOTS * NEED + 2), segment_steps=2)
+    for b in range(4):
+        slo.submit(prompts[b][None, :], max_new=MAX_NEW,
+                   slo_class="batch", request_id=b)
+    evs = slo.step()
+    slo.submit(prompts[4][None, :], max_new=MAX_NEW,
+               slo_class="interactive", request_id=4)
+    evs += slo.run_until_drained()
+    streams = {r: [] for r in range(5)}
+    for e in evs:
+        if e.kind in ("token", "finished"):
+            streams[e.request_id].extend(e.tokens)
+    assert slo.preemptions > 0
+    assert slo.replay_mismatches == 0
+    for rid in range(5):
+        got = np.asarray(streams[rid], np.int32)
+        want = np.asarray(sync.tokens[rid, :int(sync.lengths[rid])])
+        np.testing.assert_array_equal(got, want)

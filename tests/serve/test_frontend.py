@@ -1,0 +1,152 @@
+"""Asyncio streaming front-end: concurrent token streams over the SLO
+layer stay bit-identical to the batch reference, backpressure bounds
+admission, and preemption surfaces as an event without corrupting the
+stream."""
+
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.serve import frontend as fe_lib
+from repro.serve import scheduler as sched_lib
+from repro.serve import slo as slo_lib
+
+KEY = jax.random.PRNGKey(13)
+
+PROMPT, MAX_NEW, BLOCK = 16, 10, 8
+NEED = 4      # ceil((16 + 10 + 1) / 8)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_config("smollm-135m", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _sched(params, cfg, kv_blocks=None):
+    return sched_lib.DecodeScheduler(
+        params, cfg, n_slots=4, prompt_len=PROMPT, max_new_cap=MAX_NEW,
+        eos_id=-1, kv="paged", kv_block=BLOCK, kv_blocks=kv_blocks,
+        prefill="chunked", chunk_tokens=8)
+
+
+def _prompts(cfg, n):
+    return np.asarray(jax.random.randint(KEY, (n, PROMPT), 2, cfg.vocab))
+
+
+def _reference(params, cfg, pnp):
+    sched = _sched(params, cfg)
+    for i in range(pnp.shape[0]):
+        sched.submit(pnp[i:i + 1], max_new=MAX_NEW, request_id=i)
+    return {f.request_id: f.tokens for f in sched.run_until_drained()}
+
+
+async def _consume(fe, pnp, rid, out, slo_class="batch", events=None):
+    toks = []
+    async for ev in fe.stream(pnp[rid:rid + 1], max_new=MAX_NEW,
+                              slo_class=slo_class, request_id=rid):
+        if events is not None:
+            events.append(ev["event"])
+        if ev["event"] == "token":
+            toks.extend(ev["tokens"])
+    out[rid] = toks
+
+
+def test_format_sse():
+    frame = fe_lib.format_sse(
+        {"event": "token", "request_id": 3, "tokens": [1, 2]})
+    assert frame == ('event: token\n'
+                     'data: {"request_id": 3, "tokens": [1, 2]}\n\n')
+    assert fe_lib.format_sse({"event": "done"}) == "event: done\ndata: {}\n\n"
+
+
+def test_concurrent_streams_bit_identical(smollm):
+    """Six clients race through a 4-slot engine; every stream matches
+    the sequential batch reference token for token."""
+    cfg, params = smollm
+    pnp = _prompts(cfg, 6)
+    ref = _reference(params, cfg, pnp)
+
+    async def run():
+        slo = slo_lib.SLOScheduler(_sched(params, cfg), segment_steps=4)
+        fe = fe_lib.StreamingFrontend(slo, max_inflight=8)
+        out = {}
+        await asyncio.gather(*[
+            _consume(fe, pnp, rid, out) for rid in range(6)])
+        return out, fe
+
+    out, fe = asyncio.run(run())
+    for rid in range(6):
+        np.testing.assert_array_equal(np.asarray(out[rid]), ref[rid])
+    assert fe.inflight == 0
+
+
+def test_backpressure_single_inflight(smollm):
+    """max_inflight=1: the frontend admits one request at a time; the
+    rest wait at the semaphore, and everyone still completes
+    bit-identically."""
+    cfg, params = smollm
+    pnp = _prompts(cfg, 3)
+    ref = _reference(params, cfg, pnp)
+    peak = {"inflight": 0}
+
+    async def watched(fe, pnp, rid, out):
+        async for ev in fe.stream(pnp[rid:rid + 1], max_new=MAX_NEW,
+                                  request_id=rid):
+            peak["inflight"] = max(peak["inflight"], fe.inflight)
+            out.setdefault(rid, []).extend(
+                ev["tokens"] if ev["event"] == "token" else [])
+
+    async def run():
+        slo = slo_lib.SLOScheduler(_sched(params, cfg), segment_steps=4)
+        fe = fe_lib.StreamingFrontend(slo, max_inflight=1)
+        out = {}
+        await asyncio.gather(*[watched(fe, pnp, r, out) for r in range(3)])
+        return out
+
+    out = asyncio.run(run())
+    assert peak["inflight"] == 1
+    for rid in range(3):
+        np.testing.assert_array_equal(np.asarray(out[rid]), ref[rid])
+
+
+def test_preempted_event_and_clean_stream(smollm):
+    """A batch stream that gets evicted sees a "preempted" event, then
+    its remaining tokens exactly once — no duplicates, no gaps."""
+    cfg, params = smollm
+    pnp = _prompts(cfg, 4)
+    ref = _reference(params, cfg, pnp)
+
+    async def run():
+        slo = slo_lib.SLOScheduler(
+            _sched(params, cfg, kv_blocks=2 * NEED), segment_steps=2)
+        fe = fe_lib.StreamingFrontend(slo, max_inflight=8)
+        out, kinds = {}, {r: [] for r in range(4)}
+        batch = [asyncio.ensure_future(
+            _consume(fe, pnp, r, out, events=kinds[r])) for r in range(3)]
+        await asyncio.sleep(0.3)     # let batch traffic take the pool
+        await _consume(fe, pnp, 3, out, slo_class="interactive",
+                       events=kinds[3])
+        await asyncio.gather(*batch)
+        return out, kinds, slo
+
+    out, kinds, slo = asyncio.run(run())
+    assert slo.preemptions > 0
+    assert slo.replay_mismatches == 0
+    preempted = [r for r in range(3) if "preempted" in kinds[r]]
+    assert preempted                 # somebody was evicted mid-stream
+    for rid in range(4):
+        np.testing.assert_array_equal(np.asarray(out[rid]), ref[rid])
+        assert kinds[rid][-1] == "done"
+
+
+def test_rejects_bad_max_inflight(smollm):
+    cfg, params = smollm
+    slo = slo_lib.SLOScheduler(_sched(params, cfg))
+    with pytest.raises(ValueError, match="max_inflight"):
+        fe_lib.StreamingFrontend(slo, max_inflight=0)

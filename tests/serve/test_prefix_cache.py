@@ -381,9 +381,11 @@ def test_warm_admission_skips_prefill_steps(smollm):
     sched.submit(p[None, :], max_new=4)
     list(sched.run_until_drained())
     cold_steps = sched.total_steps
+    # stats are per run (reset on submit-into-idle), so the second
+    # drain's counters stand alone — no subtraction needed
     sched.submit(p[None, :], max_new=4)
     list(sched.run_until_drained())
-    warm_steps = sched.total_steps - cold_steps
+    warm_steps = sched.total_steps
     # plen=16 -> cap 3 shared blocks = 12 positions = 3 chunks skipped
     assert sched.prefix_hit_blocks == 3
     assert warm_steps == cold_steps - 3

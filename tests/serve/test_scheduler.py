@@ -425,3 +425,43 @@ def test_sharded_slot_pool_8dev():
                 assert sched.free_blocks == sched.kv_blocks
             print("sharded pool OK", kv)
     """, n_devices=8)
+
+
+# ------------------- per-run stats lifecycle --------------------------------
+
+def test_stats_reset_between_runs(smollm):
+    """Regression: a reused scheduler reports PER-RUN stats. Counters
+    accumulate across manual step()s within one run, then reset when
+    work is submitted to a fully drained pool — so back-to-back runs of
+    identical traffic report identical numbers instead of doubling."""
+    cfg, params = smollm
+    B, S, NEW = 3, 8, 6
+    prompt = jax.random.randint(KEY, (B, S), 2, cfg.vocab)
+    sched = sched_lib.DecodeScheduler(params, cfg, n_slots=2, prompt_len=S,
+                                      max_new_cap=NEW, eos_id=1, kv="paged",
+                                      kv_block=4)
+
+    def one_run():
+        for b in range(B):
+            sched.submit(prompt[b:b + 1], max_new=NEW, request_id=b)
+        n = len(sched.run_until_drained())
+        return n, (sched.total_steps, sched.tokens_emitted,
+                   sched.peak_resident)
+
+    n1, s1 = one_run()
+    assert n1 == B and s1[0] > 0 and s1[1] > 0
+    n2, s2 = one_run()
+    assert n2 == B
+    assert s2 == s1          # second run did not inherit the first's stats
+
+    # hybrid driving stays ONE run: stats keep accumulating across a
+    # manual step() and the drain that follows it (the reset only fires
+    # on submit-into-idle, never mid-flight)
+    for b in range(B):
+        sched.submit(prompt[b:b + 1], max_new=NEW, request_id=b)
+    sched.step()
+    mid = sched.total_steps
+    sched.run_until_drained()
+    assert sched.total_steps >= mid
+    assert (sched.total_steps, sched.tokens_emitted,
+            sched.peak_resident) == s1

@@ -1,0 +1,275 @@
+"""SLO layer: priority ordering, block-level preemption, replay
+bit-identity, metrics (DESIGN.md §8.5).
+
+Acceptance invariants: (1) a preempted-and-replayed request's final
+token stream is BIT-IDENTICAL to an uninterrupted run (same rid-derived
+key + emission-index PRNG keying); (2) preemption returns every block
+it claims to (host free-list mirror == device free-list); (3) a higher
+priority class's first token never waits behind a flood of lower
+priority traffic; (4) prefix-index bookkeeping survives preemption —
+READY registrations stay matchable, mid-prefill ones leave the index.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.serve import scheduler as sched_lib
+from repro.serve import slo as slo_lib
+
+KEY = jax.random.PRNGKey(11)
+
+PROMPT, MAX_NEW, BLOCK = 16, 12, 8
+# ceil((16 + 12 + 1) / 8) = 4 blocks/request
+NEED = 4
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_config("smollm-135m", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _sched(params, cfg, kv_blocks, **kw):
+    return sched_lib.DecodeScheduler(
+        params, cfg, n_slots=4, prompt_len=PROMPT, max_new_cap=MAX_NEW,
+        eos_id=-1, kv="paged", kv_block=BLOCK, kv_blocks=kv_blocks,
+        prefill="chunked", chunk_tokens=8, **kw)
+
+
+def _prompts(cfg, n):
+    return np.asarray(jax.random.randint(KEY, (n, PROMPT), 2, cfg.vocab))
+
+
+def _reference(params, cfg, pnp, rids):
+    """Uninterrupted FIFO streams of the same rids on a roomy pool."""
+    sched = _sched(params, cfg, kv_blocks=None)
+    for i, rid in enumerate(rids):
+        sched.submit(pnp[i:i + 1], max_new=MAX_NEW, request_id=rid)
+    return {f.request_id: f.tokens for f in sched.run_until_drained()}
+
+
+# --------------- DecodeScheduler.preempt_slots (mechanism) ------------------
+
+def test_preempt_free_resubmit_bit_identical(smollm):
+    """Preempt a mid-decode slot directly: its blocks return to the
+    free-list mirror, the snapshot holds what was emitted, and the
+    resubmitted request regenerates the IDENTICAL stream."""
+    cfg, params = smollm
+    pnp = _prompts(cfg, 2)
+    ref = _reference(params, cfg, pnp, [0, 1])
+    sched = _sched(params, cfg, kv_blocks=2 * NEED)
+    for b in range(2):
+        sched.submit(pnp[b:b + 1], max_new=MAX_NEW, request_id=b)
+    sched.step(max_steps=6)          # past prefill (2 iters), mid-decode
+    assert sched._busy[:2].all()
+    free_before = sched.free_blocks
+    [p] = sched.preempt_slots([1])
+    assert p.request_id == 1
+    assert len(p.tokens) > 0         # it really was mid-stream
+    np.testing.assert_array_equal(p.tokens, ref[1][:len(p.tokens)])
+    assert sched.free_blocks == free_before + NEED
+    assert sched.preemptions == 1
+    # device free-list agrees with the host mirror
+    node = sched.pool.cache[sched._kv_key]
+    assert int(node.free_count) == sched.free_blocks
+    sched.resubmit(p)
+    got = {f.request_id: f.tokens for f in sched.run_until_drained()}
+    for rid in (0, 1):
+        np.testing.assert_array_equal(got[rid], ref[rid])
+    assert sched.free_blocks == sched.kv_blocks
+
+
+def test_preempt_validation(smollm):
+    cfg, params = smollm
+    sched = _sched(params, cfg, kv_blocks=2 * NEED)
+    with pytest.raises(ValueError, match="not resident"):
+        sched.preempt_slots([0])
+
+
+def test_preempt_mid_prefill_slot(smollm):
+    """A slot still PREFILLING can be preempted: registers return to
+    FREE, blocks come back, and the replay still matches."""
+    cfg, params = smollm
+    pnp = _prompts(cfg, 1)
+    ref = _reference(params, cfg, pnp, [0])
+    sched = _sched(params, cfg, kv_blocks=NEED)
+    sched.submit(pnp[0:1], max_new=MAX_NEW, request_id=0)
+    sched.step(max_steps=1)          # 8 of 16 prompt tokens written
+    assert bool(np.asarray(sched.pool.prefilling)[0])
+    [p] = sched.preempt_slots([0])
+    assert len(p.tokens) == 0
+    assert sched.free_blocks == sched.kv_blocks
+    sched.resubmit(p)
+    got = {f.request_id: f.tokens for f in sched.run_until_drained()}
+    np.testing.assert_array_equal(got[0], ref[0])
+
+
+def test_reclaimable_counts_exclusive_blocks(smollm):
+    """KVCache.reclaimable: a resident row's exclusively-held block
+    count; dense rows report zero."""
+    cfg, params = smollm
+    sched = _sched(params, cfg, kv_blocks=2 * NEED)
+    pnp = _prompts(cfg, 1)
+    sched.submit(pnp[0:1], max_new=MAX_NEW, request_id=0)
+    sched.step(max_steps=2)
+    rec = np.asarray(sched.pool.cache[sched._kv_key].reclaimable())
+    assert rec[0] == NEED            # all its blocks are exclusive
+    assert rec[1:].sum() == 0
+    from repro.serve import kv_cache as kvc
+    dense = kvc.DenseKVCache.create(1, 3, 8, 1, 4, np.float32)
+    assert np.asarray(dense.reclaimable()).tolist() == [0, 0, 0]
+
+
+# --------------- SLOScheduler (policy) --------------------------------------
+
+def test_overload_preempts_and_replays_bit_identical(smollm):
+    """The tentpole invariant end to end: flood batch traffic on a pool
+    sized for 2 residents, inject an interactive request mid-thrash —
+    it preempts, every stream (victims included) matches the
+    uninterrupted reference, and everyone completes."""
+    cfg, params = smollm
+    pnp = _prompts(cfg, 6)
+    ref = _reference(params, cfg, pnp, list(range(6)))
+    sched = _sched(params, cfg, kv_blocks=2 * NEED)
+    slo = slo_lib.SLOScheduler(sched, segment_steps=4)
+    streams = {b: [] for b in range(6)}
+    for b in range(5):
+        slo.submit(pnp[b:b + 1], max_new=MAX_NEW, slo_class="batch",
+                   request_id=b)
+    evs = slo.step() + slo.step()
+    slo.submit(pnp[5:6], max_new=MAX_NEW, slo_class="interactive",
+               request_id=5)
+    evs += slo.run_until_drained()
+    for e in evs:
+        if e.kind in ("token", "finished"):
+            streams[e.request_id].extend(e.tokens)
+    assert slo.preemptions > 0
+    assert slo.replay_mismatches == 0
+    assert slo.completed == 6
+    for rid in range(6):
+        np.testing.assert_array_equal(np.asarray(streams[rid]), ref[rid])
+    assert sched.free_blocks == sched.kv_blocks
+    s = slo.json_summary()
+    assert s["classes"]["batch"]["preempted_times"] > 0
+    assert s["classes"]["batch"]["completed"] == 5
+    assert s["classes"]["interactive"]["completed"] == 1
+
+
+def test_priority_skips_queue(smollm):
+    """An interactive arrival overtakes a deep batch backlog: its TTFT
+    (in steps) beats every still-queued batch request's."""
+    cfg, params = smollm
+    pnp = _prompts(cfg, 7)
+    sched = _sched(params, cfg, kv_blocks=2 * NEED)
+    slo = slo_lib.SLOScheduler(sched, segment_steps=4)
+    for b in range(6):
+        slo.submit(pnp[b:b + 1], max_new=MAX_NEW, slo_class="batch",
+                   request_id=b)
+    slo.step()
+    slo.submit(pnp[6:7], max_new=MAX_NEW, slo_class="interactive",
+               request_id=6)
+    slo.run_until_drained()
+    s = slo.json_summary()["classes"]
+    assert (s["interactive"]["ttft_steps"]["p50"]
+            < s["batch"]["ttft_steps"]["p50"])
+
+
+def test_equal_priority_never_preempts(smollm):
+    """Preemption eligibility is STRICT (victim priority > incoming):
+    same-class overload queues instead of thrashing."""
+    cfg, params = smollm
+    pnp = _prompts(cfg, 4)
+    sched = _sched(params, cfg, kv_blocks=2 * NEED)
+    slo = slo_lib.SLOScheduler(sched, segment_steps=4)
+    for b in range(4):
+        slo.submit(pnp[b:b + 1], max_new=MAX_NEW, slo_class="interactive",
+                   request_id=b)
+    slo.run_until_drained()
+    assert slo.preemptions == 0
+    assert slo.completed == 4
+
+
+def test_deadline_orders_within_class(smollm):
+    """Two batch requests, submission order opposite their deadlines,
+    one admissible slot's worth of blocks: the earlier deadline goes
+    first."""
+    cfg, params = smollm
+    pnp = _prompts(cfg, 2)
+    sched = _sched(params, cfg, kv_blocks=NEED)     # one resident max
+    slo = slo_lib.SLOScheduler(sched, segment_steps=4)
+    slo.submit(pnp[0:1], max_new=MAX_NEW, slo_class="batch",
+               deadline=100.0, request_id=0)
+    slo.submit(pnp[1:2], max_new=MAX_NEW, slo_class="batch",
+               deadline=50.0, request_id=1)
+    order = []
+    while slo.pending:
+        for e in slo.step():
+            if e.kind == "finished":
+                order.append(e.request_id)
+    assert order == [1, 0]
+
+
+def test_preemption_with_prefix_cache(smollm):
+    """Preempting slots on a prefix-cached pool keeps the index sane:
+    READY registrations stay matchable (the replay maps them back),
+    mid-prefill ones are evicted, and the drained pool's free-list
+    matches the index's surviving pins."""
+    cfg, params = smollm
+    pnp = _prompts(cfg, 4)
+    ref = _reference(params, cfg, pnp, list(range(4)))
+    sched = _sched(params, cfg, kv_blocks=3 * NEED, prefix_cache=True)
+    slo = slo_lib.SLOScheduler(sched, segment_steps=2)
+    for b in range(3):
+        slo.submit(pnp[b:b + 1], max_new=MAX_NEW, slo_class="batch",
+                   request_id=b)
+    evs = slo.step()                 # some victims still mid-prefill
+    slo.submit(pnp[3:4], max_new=MAX_NEW, slo_class="interactive",
+               request_id=3)
+    evs += slo.run_until_drained()
+    streams = {b: [] for b in range(4)}
+    for e in evs:
+        if e.kind in ("token", "finished"):
+            streams[e.request_id].extend(e.tokens)
+    assert slo.preemptions > 0
+    assert slo.replay_mismatches == 0
+    for rid in range(4):
+        np.testing.assert_array_equal(np.asarray(streams[rid]), ref[rid])
+    # index pins are the only blocks still held after the drain
+    idx = sched._prefix_index
+    pinned = sum(1 for e in idx.entries.values() if e.block_id >= 0)
+    assert sched.free_blocks == sched.kv_blocks - pinned
+    node = sched.pool.cache[sched._kv_key]
+    assert int(node.free_count) == sched.free_blocks
+    # every surviving entry is READY (no half-written block remained)
+    assert all(e.ready for e in idx.entries.values())
+
+
+def test_metrics_summary_shape(smollm):
+    cfg, params = smollm
+    pnp = _prompts(cfg, 2)
+    sched = _sched(params, cfg, kv_blocks=None)
+    slo = slo_lib.SLOScheduler(sched, segment_steps=4)
+    for b in range(2):
+        slo.submit(pnp[b:b + 1], max_new=MAX_NEW,
+                   slo_class="interactive", request_id=b)
+    slo.run_until_drained()
+    s = slo.json_summary()
+    c = s["classes"]["interactive"]
+    assert c["completed"] == 2
+    for k in ("ttft_steps", "itl_steps", "ttft_wall_s", "itl_wall_s"):
+        assert c[k]["p50"] is not None and c[k]["p99"] is not None
+    assert c["ttft_attainment"] is not None   # class has a ttft budget
+    assert s["replay_mismatches"] == 0
+    assert s["total_steps"] > 0
+
+
+def test_rejects_prefilled_inner_queue(smollm):
+    cfg, params = smollm
+    sched = _sched(params, cfg, kv_blocks=None)
+    sched.submit(_prompts(cfg, 1)[0:1], max_new=4)
+    with pytest.raises(ValueError, match="ordering"):
+        slo_lib.SLOScheduler(sched)

@@ -1,0 +1,252 @@
+"""Adaptive-depth decode: confidence-based early exit vs full depth
+(DESIGN.md §8.6).
+
+A randomly initialised smoke model has no reason to be confident, so
+the bench CONSTRUCTS a model whose exit decision is exact: the smoke
+config is deepened to 12 layers and every block past layer ``EXIT_AT``
+is made an exact identity by zeroing its attention output projection
+and MLP down projection (both residual branches then add zero). The
+logit margin after layer ``EXIT_AT`` equals the final margin, so with
+``exit_min_layers=EXIT_AT`` and threshold -1 (any margin clears; the
+compute dtype is bf16, where exact top-2 ties make ``margin > 0``
+stochastic) every row exits at depth ``EXIT_AT`` and the emitted
+tokens are bit-identical to the full 12-layer pass — exactness by
+construction, not by tolerance. The
+skipped layers' K/V is filled from the halting layer's hidden state,
+which the identity tail leaves unchanged, so later decode steps attend
+to exactly the cache the full-depth pass would have written.
+
+``--smoke`` asserts:
+
+1. **Exact match**: early-exit tokens == full-depth tokens.
+2. **Mean depth == EXIT_AT**: the halt vector fires where constructed.
+3. **>= 1.3x decode tokens/s** at depth 2/12 (well under the 6x layer
+   ratio: the KV-fill loop still projects K/V for skipped layers, and
+   prefill + sampling are full cost in both modes).
+4. **Static gating**: the jitted ``decode_step`` jaxpr contains no
+   cache-length attention contraction outside the halt loop
+   (``models.adaptive.check_depth_gating``) — halted rows cost zero
+   attention FLOPs by construction of the GRAPH, not by measurement.
+
+Also records a threshold sweep on the un-doctored random-init model
+(mean layers/token vs exit threshold) to show the knob is continuous.
+
+``--smoke`` writes ``BENCH_adaptive_depth.json`` at the repo root (CI
+uploads it). CSV rows: name,us_per_call,derived.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO_ROOT not in sys.path:        # script mode: python benchmarks/...
+    sys.path.insert(0, REPO_ROOT)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.configs import get_config
+from repro.models import adaptive, model_zoo
+from repro.serve import engine
+
+ARCH = "smollm-135m"
+DEEP = 12                  # deepened smoke depth (smoke default is 2)
+EXIT_AT = 2                # identity tail starts here; exact exit depth
+PROMPT = 16
+MAX_NEW = 64
+BATCH = 4
+EOS = -1                   # budget-only retirement: equal work per mode
+DEPTH_STEPS = 16           # decode steps sampled for mean-depth stats
+# dense cache length for the jaxpr gating check — must differ from
+# every other tensor dim (d_model=48, d_ff=128, vocab=512, heads=3,
+# head_dim=16, n_layers=12) so "cache-length contraction" is
+# unambiguous in the graph walk
+CACHE_LEN = 49
+# random-init bf16 logit margins sit around 0.02-0.1, so the sweep
+# brackets that range to show mean depth moving continuously
+SWEEP = (float("inf"), 0.1, 0.03, 0.0)
+
+
+def identity_tail(params, e: int):
+    """Zero block outputs from layer ``e`` on: residual branches add 0,
+    so layers e..L-1 are exact identities on the hidden state."""
+    out = jax.tree.map(lambda x: x, params)        # fresh containers
+    out["layers"] = dict(out["layers"])
+    out["layers"]["attn"] = dict(out["layers"]["attn"])
+    out["layers"]["mlp"] = dict(out["layers"]["mlp"])
+    out["layers"]["attn"]["wo"] = out["layers"]["attn"]["wo"].at[e:].set(0.0)
+    out["layers"]["mlp"]["w_down"] = (
+        out["layers"]["mlp"]["w_down"].at[e:].set(0.0))
+    return out
+
+
+def _prompts(cfg, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(2, cfg.vocab, (BATCH, PROMPT)),
+                       jnp.int32)
+
+
+def _gen(cfg):
+    return jax.jit(lambda p, t: engine.generate_batch_sync(
+        p, cfg, t, max_new=MAX_NEW, eos_id=EOS))
+
+
+def mean_depth(params, cfg, prompts, steps: int = DEPTH_STEPS) -> float:
+    """Mean layers/token over ``steps`` greedy decode steps (the
+    per-row depth counter ``decode_step`` returns, not a timer)."""
+    cache = engine.make_cache(cfg, BATCH, CACHE_LEN)
+    logits, cache = engine.prefill(params, cfg, prompts, cache)
+    step = jax.jit(lambda p, t, c, n: engine.decode_step(
+        p, cfg, t, c, n, with_depth=True))
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    depths, cur = [], PROMPT + 1
+    for _ in range(steps):
+        logits, cache, d = step(params, tok, cache, jnp.int32(cur))
+        depths.append(np.asarray(d))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        cur += 1
+    return float(np.mean(depths))
+
+
+def gating_stats(params, cfg, prompts):
+    """Static zero-FLOP check: walk the jitted decode_step jaxpr."""
+    cache = engine.make_cache(cfg, BATCH, CACHE_LEN)
+    _, cache = engine.prefill(params, cfg, prompts, cache)
+    tok = jnp.zeros((BATCH, 1), jnp.int32)
+    closed = jax.make_jaxpr(lambda p, t, c, n: engine.decode_step(
+        p, cfg, t, c, n, with_depth=True))(
+        params, tok, cache, jnp.int32(PROMPT + 1))
+    return adaptive.check_depth_gating(closed, CACHE_LEN)
+
+
+def run():
+    cfg = dataclasses.replace(get_config(ARCH, smoke=True), n_layers=DEEP)
+    params = identity_tail(
+        model_zoo.init_params(cfg, jax.random.PRNGKey(0)), EXIT_AT)
+    # threshold -1: halt the moment the min-layer floor allows (the
+    # margin is >= 0 by definition; at 0.0 exact bf16 top-2 ties
+    # would sporadically run rows full-depth and blur the depth stat)
+    exit_cfg = dataclasses.replace(cfg, early_exit=True,
+                                   exit_threshold=-1.0,
+                                   exit_min_layers=EXIT_AT)
+    prompts = _prompts(cfg)
+
+    gen_full, gen_exit = _gen(cfg), _gen(exit_cfg)
+    full = gen_full(params, prompts)
+    exitd = gen_exit(params, prompts)
+    identical = bool(np.array_equal(np.asarray(full.tokens),
+                                    np.asarray(exitd.tokens)))
+    us_full = time_fn(gen_full, params, prompts, iters=5)
+    us_exit = time_fn(gen_exit, params, prompts, iters=5)
+    toks = BATCH * MAX_NEW
+    depth = mean_depth(params, exit_cfg, prompts)
+    gating = gating_stats(params, exit_cfg, prompts)
+
+    # threshold sweep on the un-doctored model: mean layers/token is a
+    # continuous function of the margin threshold
+    rnd = model_zoo.init_params(cfg, jax.random.PRNGKey(3))
+    sweep = []
+    for thr in SWEEP:
+        c = dataclasses.replace(cfg, early_exit=True, exit_threshold=thr,
+                                exit_min_layers=1)
+        sweep.append({"threshold": thr,
+                      "mean_depth": mean_depth(rnd, c, prompts)})
+
+    return {
+        "full": {"us_per_call": us_full, "tok_s": toks / (us_full * 1e-6)},
+        "exit": {"us_per_call": us_exit, "tok_s": toks / (us_exit * 1e-6)},
+        "identical": identical,
+        "speedup": us_full / us_exit,
+        "mean_depth": depth,
+        "gating": gating,
+        "sweep": sweep,
+    }
+
+
+def write_json(res, path=None):
+    path = path or os.path.join(REPO_ROOT, "BENCH_adaptive_depth.json")
+    doc = {
+        "bench": "adaptive_depth",
+        "workload": {"arch": ARCH, "n_layers": DEEP, "exit_at": EXIT_AT,
+                     "prompt": PROMPT, "max_new": MAX_NEW, "batch": BATCH,
+                     "cache_len": CACHE_LEN, "depth_steps": DEPTH_STEPS},
+        **{k: res[k] for k in ("full", "exit", "identical", "speedup",
+                               "mean_depth", "gating", "sweep")},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return path
+
+
+_LAST = {}   # rows() stashes measurements so --json doesn't re-run
+
+
+def rows():
+    res = run()
+    _LAST["res"] = res
+    out = [
+        ("AdaptiveDepth/full", res["full"]["us_per_call"],
+         f"{DEEP} layers, {res['full']['tok_s']:.0f} tok/s"),
+        ("AdaptiveDepth/exit", res["exit"]["us_per_call"],
+         f"mean depth {res['mean_depth']:.2f}/{DEEP}, "
+         f"{res['exit']['tok_s']:.0f} tok/s"),
+        ("AdaptiveDepth/speedup", 0.0,
+         f"{res['speedup']:.2f}x tokens/s, "
+         f"bit-identical={res['identical']}, "
+         f"gated dots {res['gating']['attn_dots_gated']}, "
+         f"ungated {res['gating']['attn_dots_ungated']}"),
+    ]
+    write_json(res)
+    return out
+
+
+def json_summary():
+    """Structured record for benchmarks/run.py --json (reuses the
+    measurements the preceding rows() call already took)."""
+    res = _LAST.get("res") or run()
+    return {k: res[k] for k in ("full", "exit", "identical", "speedup",
+                                "mean_depth", "gating", "sweep")}
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI run: asserts exact-match tokens, mean "
+                         "depth == EXIT_AT, >= 1.3x tokens/s, and the "
+                         "static zero-FLOP gating of halted rows; "
+                         "writes BENCH_adaptive_depth.json")
+    args = ap.parse_args()
+    res = run()
+    path = write_json(res)
+    print(f"full: {res['full']['tok_s']:.0f} tok/s ({DEEP} layers); "
+          f"exit: {res['exit']['tok_s']:.0f} tok/s "
+          f"(mean depth {res['mean_depth']:.2f})")
+    print(f"speedup {res['speedup']:.2f}x, exact-match "
+          f"{res['identical']}, gating {res['gating']} -> {path}")
+    print("sweep: " + ", ".join(
+        f"thr={s['threshold']:g}: {s['mean_depth']:.2f}"
+        for s in res["sweep"]))
+    if args.smoke:
+        assert res["identical"], \
+            "early-exit tokens diverged from full depth"
+        assert abs(res["mean_depth"] - EXIT_AT) < 1e-6, \
+            f"mean depth {res['mean_depth']} != {EXIT_AT}"
+        assert res["speedup"] >= 1.3, \
+            f"speedup {res['speedup']:.2f} < 1.3x"
+        g = res["gating"]
+        assert g["halt_loops"] >= 1, "no halt loop in decode jaxpr"
+        assert g["attn_dots_gated"] > 0, "no gated attention dots"
+        assert g["attn_dots_ungated"] == 0, \
+            f"{g['attn_dots_ungated']} attention dots outside halt loop"
+        print("ADAPTIVE_DEPTH_SMOKE_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,13 +18,13 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> None:
-    from . import (bench_chunked_prefill, bench_dqn, bench_loop_overhead,
-                   bench_loop_scaling, bench_memory_swap,
-                   bench_model_parallel, bench_paged_attention,
-                   bench_paged_kv, bench_parallel_iterations,
-                   bench_prefix_cache, bench_serving, bench_slo,
-                   bench_spec_decode, bench_static_vs_dynamic,
-                   roofline_report)
+    from . import (bench_adaptive_depth, bench_chunked_prefill, bench_dqn,
+                   bench_loop_overhead, bench_loop_scaling,
+                   bench_memory_swap, bench_model_parallel,
+                   bench_paged_attention, bench_paged_kv,
+                   bench_parallel_iterations, bench_prefix_cache,
+                   bench_serving, bench_slo, bench_spec_decode,
+                   bench_static_vs_dynamic, roofline_report)
 
     suites = [
         ("Fig11", bench_loop_scaling),
@@ -40,6 +40,7 @@ def main() -> None:
         ("ChunkedPrefill", bench_chunked_prefill),
         ("PrefixCache", bench_prefix_cache),
         ("SpecDecode", bench_spec_decode),
+        ("AdaptiveDepth", bench_adaptive_depth),
         ("SLO", bench_slo),
         ("Roofline", roofline_report),
     ]

@@ -77,6 +77,22 @@ class ModelConfig:
     attn_k_chunk: int = 1024
     attn_skip_masked_blocks: bool = False  # causal block skipping (§Perf)
     fuse_attn_mlp_allgather: bool = False  # beyond-paper opt (§Perf)
+    # adaptive depth (models/adaptive.py): confidence-based early-exit
+    # decode + mixture-of-depths token routing. Defaults keep both OFF
+    # and every existing trace untouched.
+    early_exit: bool = False       # decode layer loop gains a per-row
+    #                                halt vector (core.while_loop)
+    exit_threshold: float = float("inf")  # logit-margin (top1 - top2)
+    #                                a row must clear to halt; inf =
+    #                                machinery on, no row ever halts
+    exit_min_layers: int = 1       # layers every row must run before
+    #                                the halt check may fire
+    mod_capacity: float = 0.0      # mixture-of-depths: fraction of
+    #                                tokens processed per routed layer
+    #                                (training top-capacity selection);
+    #                                0 = off, no router params
+    mod_every: int = 2             # layer i is routed iff
+    #                                i % mod_every == mod_every - 1
     citation: str = ""
 
     @property

@@ -63,6 +63,12 @@ from . import stacks as stacks_lib
 __all__ = ["while_loop", "fori_loop"]
 
 
+def _reduce_pred(ok):
+    """Scalarize a cond result: a vector predicate (per-row halt bits,
+    e.g. adaptive-depth decode) keeps the loop alive while ANY holds."""
+    return jnp.any(ok) if jnp.ndim(ok) else ok
+
+
 def _is_inexact_leaf(x) -> bool:
     return jnp.issubdtype(jnp.result_type(x), jnp.inexact)
 
@@ -90,8 +96,12 @@ def while_loop(cond_fn: Optional[Callable], body_fn: Callable, init: Any, *,
     """Run ``body_fn`` while ``cond_fn`` holds; reverse-differentiable.
 
     Args:
-      cond_fn: carry -> bool scalar. ``None`` means a counted loop of
-        exactly ``max_iters`` iterations (for-loop semantics).
+      cond_fn: carry -> bool. A non-scalar result is a per-row liveness
+        vector (paper §3.1 data-dependent predicates): the loop keeps
+        iterating while ANY element holds (reduced in-graph with
+        ``jnp.any`` — the halt decision never round-trips to the host).
+        ``None`` means a counted loop of exactly ``max_iters``
+        iterations (for-loop semantics).
       body_fn: carry -> carry (any pytree; TensorArrays welcome).
       init: initial carry.
       max_iters: static bound on the trip count; required for
@@ -200,7 +210,8 @@ def _build_while(cond_conv, body_conv, max_iters, save_policy, name,
             if max_iters is not None:
                 ok = jnp.logical_and(ok, i < max_iters)
             if cond_conv is not None:
-                ok = jnp.logical_and(ok, cond_conv(c, *cond_consts))
+                ok = jnp.logical_and(ok, _reduce_pred(
+                    cond_conv(c, *cond_consts)))
             return ok
 
         def wbody(state):
@@ -242,7 +253,8 @@ def _build_while(cond_conv, body_conv, max_iters, save_policy, name,
             i, c, _ = state
             ok = i < max_iters
             if cond_conv is not None:
-                ok = jnp.logical_and(ok, cond_conv(c, *cond_consts))
+                ok = jnp.logical_and(ok, _reduce_pred(
+                    cond_conv(c, *cond_consts)))
             return ok
 
         def wbody(state):

@@ -42,6 +42,20 @@ in-graph, so accepted tokens cost one iteration instead of
 ``accepted+1``. Greedy outputs stay bit-identical; the report prints
 accepted/drafted and the mean accept length.
 
+``--early-exit --exit-threshold T`` turns on confidence-based
+early-exit decode (DESIGN.md §8.6): each decode layer ends with a
+logit-margin check through the shared unembedding, and rows whose
+top-1/top-2 margin clears ``T`` stop running layers — the per-layer
+loop is a ``core.while_loop`` over a per-row halt vector, and skipped
+layers' K/V slots are filled from the halting layer's hidden state so
+later tokens attend to a complete cache. ``T = inf`` (the default)
+runs every layer and is bit-identical to the non-adaptive engine;
+finite ``T`` trades fidelity for depth. ``--mod-capacity C`` adds a
+mixture-of-depths router on every other layer (top-``C`` fraction of
+tokens processed in training; learned-threshold routing in decode).
+The report prints mean layers/token per request class, and
+``--compare`` re-runs the workload with early exit off.
+
 ``--prefix-cache`` (with ``--prefill chunked --kv paged``) adds
 content-addressed prefix caching (DESIGN.md §8.3): a hot prompt
 prefills ONCE — later identical prompts map the cached blocks into
@@ -129,6 +143,7 @@ def run_continuous(args, cfg, params, workload):
 
     arrival_wall = {}
     finish_wall = {}
+    req_depth = {}
     t0 = time.perf_counter()
     next_req = 0
     idle_s = 0.0          # open-loop arrival gaps: excluded from tok/s
@@ -151,6 +166,7 @@ def run_continuous(args, cfg, params, workload):
         # request landing mid-segment should find freed slots promptly
         for f in sched.step(expect_arrivals=next_req < len(workload)):
             finish_wall[f.request_id] = time.perf_counter() - t0
+            req_depth[f.request_id] = f.mean_depth
     wall = time.perf_counter() - t0
     busy = max(wall - idle_s, 1e-9)
     lat = [finish_wall[r] - arrival_wall[r] for r in finish_wall]
@@ -165,7 +181,9 @@ def run_continuous(args, cfg, params, workload):
             "accepted_tokens": sched.accepted_tokens,
             "drafted_tokens": sched.drafted_tokens,
             "accept_rate": sched.accept_rate,
-            "mean_accept_len": sched.mean_accept_len}
+            "mean_accept_len": sched.mean_accept_len,
+            "mean_depth": sched.mean_depth,
+            "req_depth": req_depth}
 
 
 def run_stream(args, cfg, params, workload):
@@ -336,6 +354,29 @@ def main():
     ap.add_argument("--draft-arch", default=None,
                     help="draft model architecture for --spec-drafter "
                          "model (must share the target's vocab)")
+    ap.add_argument("--early-exit", action="store_true",
+                    help="confidence-based early-exit decode "
+                         "(DESIGN.md §8.6): rows whose top-1/top-2 "
+                         "logit margin clears --exit-threshold stop "
+                         "running layers; skipped layers' K/V is "
+                         "filled from the halting layer's hidden "
+                         "state; threshold=inf is bit-identical to "
+                         "the non-adaptive engine")
+    ap.add_argument("--exit-threshold", type=float, default=float("inf"),
+                    help="early-exit logit-margin threshold (inf = "
+                         "never exit early; smaller = shallower)")
+    ap.add_argument("--exit-min-layers", type=int, default=1,
+                    help="layers every token must run before the "
+                         "halt check can fire")
+    ap.add_argument("--mod-capacity", type=float, default=0.0,
+                    help="mixture-of-depths: fraction of tokens each "
+                         "routed (every --mod-every'th) layer "
+                         "processes in training; decode routes by a "
+                         "learned per-token gate (0 = off; adds "
+                         "router params, so the checkpoint changes)")
+    ap.add_argument("--mod-every", type=int, default=2,
+                    help="route every Nth layer when --mod-capacity "
+                         "is set (unrouted layers process all tokens)")
     ap.add_argument("--prompt-pool", type=int, default=0,
                     help="draw the workload's prompts from this many "
                          "distinct prompts (0 = all distinct); the "
@@ -368,6 +409,12 @@ def main():
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.attn_impl is not None:
         cfg = dataclasses.replace(cfg, attn_impl=args.attn_impl)
+    if args.early_exit or args.mod_capacity:
+        cfg = dataclasses.replace(
+            cfg, early_exit=args.early_exit,
+            exit_threshold=args.exit_threshold,
+            exit_min_layers=args.exit_min_layers,
+            mod_capacity=args.mod_capacity, mod_every=args.mod_every)
     params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
     workload = build_workload(args, np.random.default_rng(args.seed))
 
@@ -405,6 +452,19 @@ def main():
           f"p99 {cont['p99_s'] * 1e3:.0f}ms | "
           f"occupancy {cont['occupancy'] * 100:.0f}% "
           f"({cont['steps']} device steps)")
+    if args.early_exit:
+        # per-class mean layers/token: group requests by their
+        # max_new budget (the workload's short/long classes)
+        by_class = {}
+        for rid, d in cont["req_depth"].items():
+            by_class.setdefault(workload[rid][1], []).append(d)
+        per = ", ".join(
+            f"max_new={m}: {np.mean(ds):.2f}"
+            for m, ds in sorted(by_class.items()))
+        print(f"[serve] adaptive depth (threshold="
+              f"{args.exit_threshold:g}): "
+              f"{cont['mean_depth']:.2f} mean layers/token of "
+              f"{cfg.n_layers} | per class: {per}")
     if args.prefix_cache:
         print(f"[serve] prefix cache: {cont['prefix_hit_blocks']} "
               f"blocks served from cache, "
@@ -418,18 +478,26 @@ def main():
               f"mean accept length "
               f"{cont['mean_accept_len']:.2f}")
     if args.compare:
-        if args.spec_k or args.prefix_cache:
+        if args.spec_k or args.prefix_cache or args.early_exit:
             # feature-off continuous baseline: same scheduler, same
-            # workload, spec/prefix off — the side-by-side isolates
-            # what the feature buys (the batch-sync baseline below
-            # can't run either feature, so comparing only against it
-            # silently dropped these stats)
+            # workload, spec/prefix/early-exit off — the side-by-side
+            # isolates what the feature buys (the batch-sync baseline
+            # below can't run these features, so comparing only
+            # against it silently dropped these stats)
             off = argparse.Namespace(**vars(args))
             off.spec_k, off.prefix_cache = 0, False
-            base = run_continuous(off, cfg, params, workload)
+            off.early_exit = False
+            # early_exit is a model-config knob, not just a scheduler
+            # one; router params (mod_capacity) are shape-compatible
+            # either way, so the same params serve both runs
+            base_cfg = (dataclasses.replace(cfg, early_exit=False)
+                        if args.early_exit else cfg)
+            base = run_continuous(off, base_cfg, params, workload)
             feats = "+".join(
                 (["spec-k%d" % args.spec_k] if args.spec_k else [])
-                + (["prefix-cache"] if args.prefix_cache else []))
+                + (["prefix-cache"] if args.prefix_cache else [])
+                + (["early-exit@%g" % args.exit_threshold]
+                   if args.early_exit else []))
             print(f"[serve] continuous feature comparison "
                   f"({feats} vs off):")
             rows = [("tok/s", f"{cont['tok_s']:.1f}",
@@ -450,6 +518,10 @@ def main():
                           str(cont["prefix_hit_blocks"]), "n/a"),
                          ("prefix evictions",
                           str(cont["prefix_evictions"]), "n/a")]
+            if args.early_exit:
+                rows += [("mean layers/token",
+                          f"{cont['mean_depth']:.2f}",
+                          f"{base['mean_depth']:.2f}")]
             for name, on_v, off_v in rows:
                 print(f"[serve]   {name:>18}: {on_v:>16} | "
                       f"{off_v:>10} (off)")

@@ -1,0 +1,271 @@
+"""Adaptive per-token depth: early-exit decode + mixture-of-depths.
+
+The paper's thesis — data-dependent control flow belongs *inside* the
+graph — applied to model depth. Two mechanisms, both driven by the
+decode layer loop in ``transformer.decode_layers``:
+
+**Confidence-based early exit** (``cfg.early_exit``): after each
+decoder block, a shared-unembed logit-margin check (top1 − top2 of the
+final-norm + tied/untied unembed head — no new parameters) halts rows
+whose margin clears ``cfg.exit_threshold``. The per-layer loop becomes
+a ``core.while_loop`` whose predicate carries the per-row halt vector:
+when every row has halted the loop exits and the remaining layers run
+zero attention/MLP FLOPs. Halted rows carry ``x`` through unchanged;
+their K/V for the layers they skip is filled from the halting layer's
+hidden state (``transformer.kv_project_append`` — standard early-exit
+KV propagation, see ``models.attention``), so later full-depth tokens
+attend correctly through the paged block table.
+
+**Mixture-of-depths** (``cfg.mod_capacity > 0``): every routed layer
+(``i % mod_every == mod_every - 1``) carries a learned scalar router
+(``sigmoid(x · w)``). Training selects the top ``capacity * S`` tokens
+per row and scales their block delta by the gate — the router weight
+sits in the differentiable path, so it trains with everything else.
+Decode thresholds the same scalar (``g >= 0.5``; the zero init makes
+that "process everything" until training moves it): skipped tokens
+reuse the early-exit masking machinery, and their K/V is still written
+(the block runs on the frozen ``x``, only its output is masked).
+
+Threshold = ∞ runs the full halt machinery with no row ever halting
+and is bit-identical to the non-adaptive path (pinned in
+``tests/serve/test_adaptive_depth.py``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..dist import sharding as sh
+from . import layers
+
+
+# =========================== gating predicates ==============================
+
+def mod_on(cfg) -> bool:
+    """Mixture-of-depths routing active (router params exist)."""
+    return cfg.mod_capacity > 0
+
+
+def enabled(cfg) -> bool:
+    """Any adaptive-depth mechanism active for this config."""
+    return bool(cfg.early_exit or mod_on(cfg))
+
+
+def validate(cfg) -> None:
+    """Reject configs whose adaptive knobs cannot work.
+
+    Adaptive depth rides the attention-family decode layer loop;
+    SSM/hybrid/audio decode drives different state machinery and the
+    hybrid's shared block has no per-layer identity to rout.
+    """
+    if not enabled(cfg):
+        return
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"adaptive depth (early_exit / mod_capacity) requires an "
+            f"attention-decoder family (dense/moe/vlm); got "
+            f"{cfg.family!r}")
+    if not 1 <= cfg.exit_min_layers <= cfg.n_layers:
+        raise ValueError(
+            f"exit_min_layers must be in [1, n_layers={cfg.n_layers}]; "
+            f"got {cfg.exit_min_layers}")
+    if not 0.0 <= cfg.mod_capacity <= 1.0:
+        raise ValueError(
+            f"mod_capacity must be in [0, 1]; got {cfg.mod_capacity}")
+    if mod_on(cfg) and cfg.mod_every < 2:
+        raise ValueError(
+            f"mod_every must be >= 2 (routing every layer would let "
+            f"tokens skip the whole stack); got {cfg.mod_every}")
+
+
+# =========================== parameters =====================================
+
+def router_params(b, cfg):
+    """Per-layer MoD router: one scalar head ``g = sigmoid(x · w)``.
+
+    Zero init pins ``g = 0.5`` everywhere: the decode threshold
+    (``g >= 0.5``) then processes every token — adaptive-off behavior
+    until training moves the weight — while the training gradient
+    (through the sigmoid-scaled delta) breaks the tie.
+    """
+    return {"w": b.p((cfg.d_model,), (sh.EMBED,), init="zeros")}
+
+
+# =========================== early exit =====================================
+
+def _unembed_weight(params, cfg):
+    # mirrors transformer.unembed_weight (local copy: transformer
+    # imports this module, so importing back would cycle)
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def exit_margin(params, cfg, x) -> jax.Array:
+    """(B,) fp32 confidence margin of the *shared* unembed exit head.
+
+    Runs the model's own final norm + unembed on the mid-stack hidden
+    state (the shared-head variant of early exit: no trained per-layer
+    exit classifiers) and returns top1 − top2 of the logits at the last
+    position. The check reads ``x`` but never writes it, so a
+    threshold that never fires leaves the residual stream bitwise
+    untouched.
+    """
+    cdt = cfg.dtype("compute")
+    h = layers.apply_norm(cfg.norm, x, params, "ln_final")
+    w = _unembed_weight(params, cfg).astype(cdt)
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(cdt), w)
+    top2 = jax.lax.top_k(logits[:, -1].astype(jnp.float32), 2)[0]
+    return top2[:, 0] - top2[:, 1]
+
+
+def make_halt_fn(params, cfg):
+    """Build the per-layer halt check for ``transformer.decode_layers``
+    (None when early exit is off — the loop then stays static).
+
+    The returned ``halt_fn(x, i) -> (B,) bool`` marks rows allowed to
+    halt AFTER layer ``i``: margin above ``cfg.exit_threshold`` and at
+    least ``cfg.exit_min_layers`` blocks applied. ``decode_layers``
+    ORs the result into its halt carry, so a halted row can never
+    un-halt within a token (monotonicity lives there, not here).
+    """
+    if not cfg.early_exit:
+        return None
+    thr = jnp.float32(cfg.exit_threshold)
+    min_layers = cfg.exit_min_layers
+
+    def halt_fn(x, i):
+        margin = exit_margin(params, cfg, x)
+        return (i + 1 >= min_layers) & (margin > thr)
+
+    return halt_fn
+
+
+# =========================== mixture of depths ==============================
+
+def is_routed(i, cfg):
+    """Whether layer ``i`` (traced or static) carries a MoD router."""
+    return (i % cfg.mod_every) == (cfg.mod_every - 1)
+
+
+def _gate(w, x) -> jax.Array:
+    """(B, S) router scalar in fp32 (stable sigmoid, tiny math)."""
+    return jax.nn.sigmoid(
+        jnp.einsum("bsd,d->bs", x.astype(jnp.float32),
+                   w.astype(jnp.float32)))
+
+
+def mod_apply_full(router, x_in, x_out, i, cfg):
+    """Training/full-forward MoD: top-capacity tokens per row keep the
+    gate-scaled block delta, the rest carry ``x`` through.
+
+    ``x_out = block(x_in)``; selected tokens get
+    ``x_in + g * (x_out - x_in)`` — the gate multiplies the delta, so
+    the router weight receives gradient (trainable). Ties at the
+    capacity threshold over-select (``>=``), which at the zero init
+    means every token processes. Non-routed layers return ``x_out``
+    unchanged.
+    """
+    g = _gate(router["w"], x_in)
+    S = x_in.shape[1]
+    k_cap = max(1, min(S, math.ceil(cfg.mod_capacity * S)))
+    if k_cap >= S:
+        sel = jnp.ones_like(g, bool)
+    else:
+        thr = jax.lax.top_k(g, k_cap)[0][:, -1:]
+        sel = g >= thr
+    delta = (x_out - x_in) * g.astype(x_in.dtype)[..., None]
+    routed = jnp.where(sel[..., None], x_in + delta, x_in)
+    return jnp.where(is_routed(i, cfg), routed, x_out)
+
+
+def mod_apply_decode(router, x_in, x_out, i, cfg):
+    """Decode MoD: top-capacity selection collapses to a threshold on
+    the learned scalar (``g >= 0.5`` — one token, no batch to rank).
+
+    Returns ``(x, applied)``: skipped rows carry ``x_in`` through
+    (their K/V was already appended by the block that ran on the frozen
+    ``x_in`` — same skipped-layer KV propagation as early exit) and
+    report ``applied=False`` for the depth stats.
+    """
+    g = _gate(router["w"], x_in)[:, -1]
+    proc = g >= 0.5
+    delta = (x_out - x_in) * g[:, None, None].astype(x_in.dtype)
+    routed_x = jnp.where(proc[:, None, None], x_in + delta, x_in)
+    routed = is_routed(i, cfg)
+    x = jnp.where(routed, routed_x, x_out)
+    applied = jnp.where(routed, proc, jnp.ones_like(proc))
+    return x, applied
+
+
+# =========================== static FLOP gating check =======================
+
+def _sub_jaxprs(eqn):
+    out = []
+
+    def add(v):
+        if hasattr(v, "jaxpr"):          # ClosedJaxpr
+            out.append(v.jaxpr)
+        elif hasattr(v, "eqns"):         # raw Jaxpr
+            out.append(v)
+        elif isinstance(v, (tuple, list)):
+            for u in v:
+                add(u)
+
+    for v in eqn.params.values():
+        add(v)
+    return out
+
+
+def _has_primitive(jaxpr, names) -> bool:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in names:
+            return True
+        for sub in _sub_jaxprs(eqn):
+            if _has_primitive(sub, names):
+                return True
+    return False
+
+
+def check_depth_gating(closed_jaxpr, cache_len: int) -> dict:
+    """Statically verify halted rows execute no attention FLOPs.
+
+    Walks the jaxpr of a traced adaptive ``decode_step`` and classifies
+    every attention contraction — a ``dot_general`` with the cache
+    length ``cache_len`` in an operand shape (the QK^T and PV matmuls;
+    pick a ``cache_len`` distinct from d_model/vocab/head dims) — by
+    whether it sits inside a ``while`` loop whose predicate reduces a
+    per-row halt vector (a ``reduce_or`` in its cond jaxpr — the
+    vector-halt predicate ``core.while_loop`` lowers). Returns::
+
+        {"halt_loops": n,        # while loops with a vector-halt cond
+         "attn_dots_gated": a,   # attention dots inside one
+         "attn_dots_ungated": u} # attention dots outside all of them
+
+    ``attn_dots_ungated == 0`` (with ``attn_dots_gated > 0``) proves
+    the property structurally: once the halt vector is all-True the
+    loop exits, and no attention contraction exists on any later path —
+    the KV-fill tail is projection-only by construction.
+    """
+    stats = {"halt_loops": 0, "attn_dots_gated": 0, "attn_dots_ungated": 0}
+
+    def walk(jaxpr, gated):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "dot_general" and any(
+                    cache_len in tuple(v.aval.shape) for v in eqn.invars):
+                stats["attn_dots_gated" if gated
+                      else "attn_dots_ungated"] += 1
+            if eqn.primitive.name == "while":
+                cond = eqn.params["cond_jaxpr"].jaxpr
+                halt = _has_primitive(cond, {"reduce_or"})
+                if halt:
+                    stats["halt_loops"] += 1
+                walk(cond, gated)
+                walk(eqn.params["body_jaxpr"].jaxpr, gated or halt)
+            else:
+                for sub in _sub_jaxprs(eqn):
+                    walk(sub, gated)
+
+    walk(closed_jaxpr.jaxpr, False)
+    return stats

@@ -287,6 +287,22 @@ def decode_attention(q, kv, *, cur_len, attn_impl: str = "xla"):
     the block table on-device and the dense ``(B, T, KV, D)`` layout
     is never materialized. Dense views — and the default
     ``attn_impl="xla"`` — take the gather path below.
+
+    Skipped-layer KV write semantics (adaptive depth): this function
+    assumes every cache position < cur_len holds valid K/V **at every
+    layer**. Early-exit decode honors that contract by construction —
+    a row that halts at layer ``e`` still appends K/V to layers
+    ``e..L-1``, projected from its frozen (halting-layer) hidden state
+    (``transformer.kv_project_append``; MoD-skipped rows likewise
+    append from their frozen ``x`` because the block's write runs
+    before its output is masked). The fill is the standard early-exit
+    KV propagation: since layer ``e``'s residual stream IS the halted
+    row's final hidden state, projecting it through each remaining
+    layer's own ``ln_attn``/``wk``/``wv`` is exactly what a full-depth
+    pass over an identity tail would have written, so later full-depth
+    tokens attend through the paged block table without ever knowing
+    their context exited early. Queries of halted rows never run (no
+    attention FLOPs past the exit) — only these K/V writes do.
     """
     if attn_impl == "pallas":
         state = getattr(kv, "paged_state", lambda: None)()

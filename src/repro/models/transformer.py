@@ -26,6 +26,7 @@ from jax.ad_checkpoint import checkpoint_name
 
 from .. import core
 from ..dist import sharding as sh
+from . import adaptive
 from . import attention as attn_lib
 from . import layers, moe as moe_lib, ssm as ssm_lib
 
@@ -65,6 +66,8 @@ def _attn_block_params(b, cfg):
         p["moe"] = moe_lib.moe_params(b, cfg, cfg.d_model)
     else:
         p["mlp"] = mlp_params(b, cfg, cfg.d_model, cfg.d_ff)
+    if adaptive.mod_on(cfg):
+        p["router"] = adaptive.router_params(b, cfg)
     return p
 
 
@@ -285,7 +288,9 @@ def _remat(fn, cfg):
 def _run_layers(stacked, x, cfg, rules, block_fn, aux0):
     """Drive the homogeneous layer stack per cfg.layer_loop.
 
-    block_fn(layer_params, x) -> (x, aux_delta)
+    block_fn(layer_params, x, i) -> (x, aux_delta) — ``i`` is the layer
+    index (traced under scan/paper_while), used by layer-position-
+    dependent features (mixture-of-depths routing).
 
     The inter-block residual stream is stored SEQUENCE-SHARDED over the
     `model` axis (Korthikanti-style sequence parallelism): the layer
@@ -294,25 +299,27 @@ def _run_layers(stacked, x, cfg, rules, block_fn, aux0):
     step, so backward recompute re-gathers instead of re-storing.
     """
 
-    def step(carry, lp):
+    def step(carry, xs):
+        lp, i = xs
         x, aux = carry
         x = sh.constrain(x, rules, (sh.BATCH, None, None))
-        x, d = block_fn(lp, x)
+        x, d = block_fn(lp, x, i)
         x = sh.constrain(x, rules, (sh.BATCH, sh.ACT_SEQ, None))
         return (x, jax.tree.map(jnp.add, aux, d)), None
 
     step = _remat(step, cfg)
     n = jax.tree.leaves(stacked)[0].shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
 
     x = sh.constrain(x, rules, (sh.BATCH, sh.ACT_SEQ, None))
     if cfg.layer_loop == "scan":
-        (x, aux), _ = jax.lax.scan(step, (x, aux0), stacked)
+        (x, aux), _ = jax.lax.scan(step, (x, aux0), (stacked, idx))
         x = sh.constrain(x, rules, (sh.BATCH, None, None))
         return x, aux
     if cfg.layer_loop == "paper_while":
         def body(i, carry):
             lp = jax.tree.map(lambda a: a[i], stacked)
-            return step(carry, lp)[0]
+            return step(carry, (lp, i))[0]
         offl = None
         if rules is not None and rules.mesh is not None and \
                 cfg.save_policy in ("offload", "carry_offload"):
@@ -326,10 +333,148 @@ def _run_layers(stacked, x, cfg, rules, block_fn, aux0):
         carry = (x, aux0)
         for i in range(n):
             lp = jax.tree.map(lambda a: a[i], stacked)
-            carry = step(carry, lp)[0]
+            carry = step(carry, (lp, jnp.int32(i)))[0]
         x, aux = carry
         return sh.constrain(x, rules, (sh.BATCH, None, None)), aux
     raise ValueError(cfg.layer_loop)
+
+
+def kv_project_append(p, h, cfg, kv_cache, positions, cur_len):
+    """K/V projection + cache append ONLY — ``attn_apply``'s decode
+    write path without q, attention, or the output projection.
+
+    This is the skipped-layer KV fill of early-exit decode: a row that
+    halted at layer ``e`` still owes the cache K/V for layers
+    ``e..L-1`` so later full-depth tokens can attend to this position
+    at every layer. The ops mirror ``attn_apply`` line-for-line, so a
+    layer filled from hidden state ``h`` holds bit-identical K/V to one
+    whose full block ran on the same ``h`` — which is exactly the
+    standard early-exit propagation rule: project the halting layer's
+    (normed) hidden state into every remaining layer's cache.
+    ``h`` must already be this layer's ``ln_attn`` output.
+    """
+    cdt = cfg.dtype("compute")
+    xc = h.astype(cdt)
+    k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", xc, p["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    return kv_cache.append(k, v, cur_len)
+
+
+def decode_layers(stacked, x, leaves, cfg, *, block_fn, halt_fn=None,
+                  kv_fill_fn=None, live=None):
+    """Drive the decode-mode layer stack (single-token step).
+
+    ``block_fn(lp, lv, x, i) -> (x_new, new_leaves, applied)`` runs one
+    decoder block at layer ``i`` against its per-layer KV leaves ``lv``
+    and MUST always perform its KV append — a row whose block output is
+    masked off (mixture-of-depths skip, early-exit halt) still writes
+    K/V projected from its frozen hidden state (see ``models.attention``
+    on skipped-layer KV semantics). ``applied`` (B,) bool reports which
+    rows' residual stream actually advanced (MoD skips return False);
+    it feeds the per-row depth stat only — the block applies its own
+    masking in the static paths.
+
+    ``halt_fn(x, i) -> (B,) bool`` (early exit) marks rows allowed to
+    halt AFTER layer ``i``. None => depth is static and the loop runs
+    per ``cfg.layer_loop`` (scan default — op-for-op the engine's
+    historical decode scan). Non-None => the loop becomes a
+    ``core.while_loop`` whose VECTOR predicate ``(i < L) & ~halted``
+    keeps iterating while ANY row is live; the halt carry is updated
+    ``halted |= halt_fn(x, i)`` so a halted row can never un-halt, and
+    halted rows carry ``x`` through unchanged (their block still ran —
+    KV propagation — but its output is discarded). After the loop, a
+    second while (``kv_fill_fn(lp, lv, x, i) -> new_leaves``;
+    projection-only, ZERO attention FLOPs) fills layers ``i_exit..L-1``
+    for every row so the cache is complete at full depth.
+
+    ``live`` (B,) bool: rows that should participate in the dynamic
+    predicate (retired slots pass False and start halted). Ignored in
+    the static paths.
+
+    Returns ``(x, new_leaves, depth)`` — depth (B,) int32 counts blocks
+    applied per row (== L everywhere when nothing is adaptive).
+    """
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    B = x.shape[0]
+    depth0 = jnp.zeros((B,), jnp.int32)
+
+    def put(lvs, i, new_lv):
+        return jax.tree.map(
+            lambda full, nl: full.at[i].set(nl.astype(full.dtype)),
+            lvs, new_lv)
+
+    if halt_fn is None:
+        if cfg.layer_loop == "scan":
+            def f(carry, xs):
+                xx, depth = carry
+                lp, lv, i = xs
+                xx, new_lv, applied = block_fn(lp, lv, xx, i)
+                return (xx, depth + applied.astype(jnp.int32)), new_lv
+            idx = jnp.arange(n, dtype=jnp.int32)
+            (x, depth), new_leaves = jax.lax.scan(
+                f, (x, depth0), (stacked, leaves, idx))
+            return x, new_leaves, depth
+        if cfg.layer_loop in ("paper_while", "unroll"):
+            def body(i, carry):
+                xx, lvs, depth = carry
+                lp = jax.tree.map(lambda a: a[i], stacked)
+                lv = jax.tree.map(lambda a: a[i], lvs)
+                xx, new_lv, applied = block_fn(lp, lv, xx, i)
+                return xx, put(lvs, i, new_lv), \
+                    depth + applied.astype(jnp.int32)
+            if cfg.layer_loop == "unroll":
+                carry = (x, leaves, depth0)
+                for i in range(n):
+                    carry = body(jnp.int32(i), carry)
+                return carry
+            return core.fori_loop(0, n, body, (x, leaves, depth0))
+        raise ValueError(cfg.layer_loop)
+
+    # --- adaptive: data-dependent per-row depth (paper §3.1: the
+    # conditional lives in-graph; the host never sees the halt bits) ---
+    if kv_fill_fn is None:
+        raise ValueError("decode_layers: halt_fn requires kv_fill_fn "
+                         "(skipped-layer KV propagation)")
+    halted0 = jnp.zeros((B,), bool) if live is None else ~live
+
+    def cond(c):
+        i, _, _, halted, _ = c
+        return (i < n) & ~halted          # vector: run while ANY row live
+
+    def body(c):
+        i, xx, lvs, halted, depth = c
+        lp = jax.tree.map(lambda a: a[i], stacked)
+        lv = jax.tree.map(lambda a: a[i], lvs)
+        x_new, new_lv, applied = block_fn(lp, lv, xx, i)
+        applied = applied & ~halted
+        xx = jnp.where(applied[:, None, None], x_new, xx)
+        depth = depth + applied.astype(jnp.int32)
+        halted = halted | halt_fn(xx, i)
+        return (i + 1, xx, put(lvs, i, new_lv), halted, depth)
+
+    i, x, leaves, halted, depth = core.while_loop(
+        cond, body, (jnp.int32(0), x, leaves, halted0, depth0),
+        max_iters=n, name="adaptive_layers")
+
+    # KV-fill tail: layers i..L-1 get K/V projected from the frozen x
+    # for EVERY row (no q / attention / MLP — projection + append only).
+    def fill_cond(c):
+        return c[0] < n
+
+    def fill_body(c):
+        j, lvs = c
+        lp = jax.tree.map(lambda a: a[j], stacked)
+        lv = jax.tree.map(lambda a: a[j], lvs)
+        new_lv = kv_fill_fn(lp, lv, x, j)
+        return (j + 1, put(lvs, j, new_lv))
+
+    _, leaves = core.while_loop(fill_cond, fill_body, (i, leaves),
+                                max_iters=n, name="kv_fill")
+    return x, leaves, depth
 
 
 # =========================== forward passes =================================
@@ -355,7 +500,7 @@ def _hybrid_layers(p, x, cfg, rules, block_kw=None):
         n_apps += 1
         seg = jax.tree.map(lambda a: a[start:min(start + k, L)], p["layers"])
 
-        def block_fn(lp, xx):
+        def block_fn(lp, xx, i):
             return ssm_block(lp, xx, cfg, rules, mode="full")[0], {}
 
         x, _ = _run_layers(seg, x, cfg, rules, block_fn, {})
@@ -376,7 +521,7 @@ def forward_features(params, cfg, tokens, *, rules=None, prefix_embeds=None
     if cfg.family == "hybrid":
         x, aux = _hybrid_layers(params, x, cfg, rules)
     elif cfg.family == "ssm":
-        def block_fn(lp, xx):
+        def block_fn(lp, xx, i):
             return ssm_block(lp, xx, cfg, rules, mode="full")[0], {}
         x, aux = _run_layers(params["layers"], x, cfg, rules, block_fn, {})
     else:
@@ -384,10 +529,13 @@ def forward_features(params, cfg, tokens, *, rules=None, prefix_embeds=None
                  "moe_z_loss": jnp.float32(0.0)}
                 if cfg.family == "moe" else {})
 
-        def block_fn(lp, xx):
-            xx, _, aux = attn_block(lp, xx, cfg, rules, positions=positions,
+        def block_fn(lp, xx, i):
+            x2, _, aux = attn_block(lp, xx, cfg, rules, positions=positions,
                                     mode="full")
-            return xx, aux
+            if adaptive.mod_on(cfg):
+                # router weight scales the kept delta -> differentiable
+                x2 = adaptive.mod_apply_full(lp["router"], xx, x2, i, cfg)
+            return x2, aux
         x, aux = _run_layers(params["layers"], x, cfg, rules, block_fn, aux0)
 
     return layers.apply_norm(cfg.norm, x, params, "ln_final"), aux

@@ -41,7 +41,7 @@ import numpy as np
 from .. import core
 from ..configs import ModelConfig
 from ..dist import sharding as sh
-from ..models import encdec, layers, ssm as ssm_lib, transformer
+from ..models import adaptive, encdec, layers, ssm as ssm_lib, transformer
 from . import kv_cache as kvc
 
 
@@ -197,7 +197,7 @@ def _decode_positions(cur_len):
 
 
 def _decode_attn_families(params, cfg, rules, x, cache, cur_len,
-                          write_mask=None):
+                          write_mask=None, live=None):
     positions = _decode_positions(cur_len)
     # Copy-on-write BEFORE the layer scan: the append at cur_len - 1
     # must never land in a block other references still read (prefix
@@ -207,16 +207,33 @@ def _decode_attn_families(params, cfg, rules, x, cache, cur_len,
         start=jnp.asarray(cur_len, jnp.int32) - 1, width=1,
         mask=write_mask)
 
-    def f(carry, xs):
-        x = carry
-        lp, leaves = xs
-        x, new_view, _ = transformer.attn_block(
-            lp, x, cfg, rules, positions=positions, mode="decode",
-            kv_cache=node.view(leaves, mask=write_mask), cur_len=cur_len)
-        return x, new_view.leaves
+    def block_fn(lp, lv, xx, i):
+        x2, new_view, _ = transformer.attn_block(
+            lp, xx, cfg, rules, positions=positions, mode="decode",
+            kv_cache=node.view(lv, mask=write_mask), cur_len=cur_len)
+        if adaptive.mod_on(cfg):
+            x2, applied = adaptive.mod_apply_decode(lp["router"], xx, x2,
+                                                    i, cfg)
+        else:
+            applied = jnp.ones((xx.shape[0],), bool)
+        return x2, new_view.leaves, applied
 
-    x, new_leaves = jax.lax.scan(f, x, (params["layers"], node.layers))
-    return x, {"attn": node.with_layers(new_leaves)}
+    halt_fn = adaptive.make_halt_fn(params, cfg)
+    kv_fill_fn = None
+    if halt_fn is not None:
+        # Skipped-layer KV propagation: project the frozen hidden state
+        # into every remaining layer's cache — no q / attention / MLP.
+        def kv_fill_fn(lp, lv, xx, i):
+            h = layers.apply_norm(cfg.norm, xx, lp, "ln_attn")
+            new_view = transformer.kv_project_append(
+                lp["attn"], h, cfg, node.view(lv, mask=write_mask),
+                positions, cur_len)
+            return new_view.leaves
+
+    x, new_leaves, depth = transformer.decode_layers(
+        params["layers"], x, node.layers, cfg, block_fn=block_fn,
+        halt_fn=halt_fn, kv_fill_fn=kv_fill_fn, live=live)
+    return x, {"attn": node.with_layers(new_leaves)}, depth
 
 
 def _decode_ssm(params, cfg, rules, x, cache, cur_len):
@@ -281,14 +298,17 @@ def _decode_audio(params, cfg, rules, x, cache, cur_len):
 
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Any,
-                cur_len, rules=None, *, write_mask=None
-                ) -> Tuple[jax.Array, Any]:
+                cur_len, rules=None, *, write_mask=None, live=None,
+                with_depth: bool = False):
     """One new token against a cache of `cur_len - 1` previous positions.
 
     token: (B, 1) int32. ``cur_len`` is a scalar (whole batch at the
     same depth — the batch-synchronous loop) or a (B,) vector of
     per-row depths (slot-based continuous batching). Returns
-    (logits (B, 1, Vp), new_cache).
+    (logits (B, 1, Vp), new_cache) — or (logits, new_cache, depth)
+    with ``with_depth=True``, where depth (B,) int32 counts decoder
+    blocks actually applied per row this step (== n_layers unless
+    adaptive depth is active; see ``models.adaptive``).
 
     ``write_mask`` (optional, attention families only): (B,) bool —
     rows whose K/V append should actually land. The chunked-prefill
@@ -297,6 +317,11 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Any,
     ``cur_len - 1`` (that is prompt position 0 they already wrote), so
     the decode write is gated where the one-shot scheduler could rely
     on retired rows being rewritten at admission.
+
+    ``live`` (optional, adaptive early-exit only): (B,) bool — rows
+    whose halt bit should keep the dynamic layer loop alive. Retired /
+    mid-prefill slots pass False: they start halted, pay no block
+    FLOPs, and never extend the loop. None = every row live.
     """
     cdt = cfg.dtype("compute")
     x = jnp.take(params["embed"].astype(cdt), token, axis=0)
@@ -305,21 +330,32 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Any,
     if write_mask is not None and fam not in ("dense", "moe", "vlm"):
         raise ValueError(f"write_mask is only supported for attention "
                          f"families; got family {fam!r}")
+    if adaptive.enabled(cfg):
+        adaptive.validate(cfg)
+    elif live is not None:
+        raise ValueError("live= requires adaptive depth "
+                         "(cfg.early_exit / cfg.mod_capacity)")
     if fam in ("dense", "moe", "vlm"):
-        x, new_cache = _decode_attn_families(params, cfg, rules, x, cache,
-                                             cur_len, write_mask)
+        x, new_cache, depth = _decode_attn_families(
+            params, cfg, rules, x, cache, cur_len, write_mask, live=live)
     elif fam == "ssm":
         x, new_cache = _decode_ssm(params, cfg, rules, x, cache, cur_len)
+        depth = jnp.full((x.shape[0],), cfg.n_layers, jnp.int32)
     elif fam == "hybrid":
         x, new_cache = _decode_hybrid(params, cfg, rules, x, cache, cur_len)
+        depth = jnp.full((x.shape[0],), cfg.n_layers, jnp.int32)
     elif fam == "audio":
         pe = layers.sinusoid_at(jnp.asarray(cur_len) - 1, cfg.d_model, cdt)
         x = x + (pe if pe.ndim == 1 else pe[:, None, :])
         x, new_cache = _decode_audio(params, cfg, rules, x, cache, cur_len)
+        depth = jnp.full((x.shape[0],), cfg.n_layers, jnp.int32)
     else:
         raise ValueError(fam)
 
-    return _logits_head(params, cfg, x, rules), new_cache
+    logits = _logits_head(params, cfg, x, rules)
+    if with_depth:
+        return logits, new_cache, depth
+    return logits, new_cache
 
 
 def verify_step(params, cfg: ModelConfig, tokens: jax.Array, cache: Any,
@@ -705,7 +741,11 @@ def generate_batch_sync(params, cfg: ModelConfig, prompt: jax.Array, *,
         i, token, done, cur, cache, ta = state
         ta = ta.write(i, jnp.where(done, eos_id, token[:, 0]))
         done = done | (token[:, 0] == eos_id)
-        logits, cache = decode_step(params, cfg, token, cache, cur, rules)
+        # EOS-finished rows start the adaptive layer loop halted: they
+        # stop paying per-layer FLOPs as well as being masked at emit.
+        logits, cache = decode_step(
+            params, cfg, token, cache, cur, rules,
+            live=~done if cfg.early_exit else None)
         nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         return (i + 1, nxt, done, cur + 1, cache, ta)
 

@@ -169,6 +169,11 @@ class SlotPool:
                              # (lower = more urgent; SLO layer)
     deadline: Any = None     # (n,) float32 — request deadline (host
                              # clock seconds; +inf = none)
+    slot_layers: Any = None  # (n,) int32 — Σ decoder blocks applied
+                             # across this request's decode steps
+                             # (adaptive depth; == L·decodes otherwise)
+    slot_decodes: Any = None  # (n,) int32 — Σ decode tokens the depth
+                             # sum covers (mean depth = layers/decodes)
 
     def tree_flatten(self):
         return (self.cache, self.next_token, self.cur_len, self.n_emitted,
@@ -176,7 +181,8 @@ class SlotPool:
                 self.keys, self.out, self.steps, self.slot_steps,
                 self.prompt, self.plen, self.pf_pos, self.prefilling,
                 self.prefix, self.draft, self.slot_accepted,
-                self.slot_windows, self.priority, self.deadline), None
+                self.slot_windows, self.priority, self.deadline,
+                self.slot_layers, self.slot_decodes), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -190,6 +196,9 @@ class FinishedRequest:
     length: int              # emitted tokens, EOS included
     text_length: int         # tokens before EOS
     hit_eos: bool
+    mean_depth: float = 0.0  # mean decoder blocks applied per decode
+                             # token (== cfg.n_layers unless adaptive
+                             # depth exited early / routed around)
 
 
 @dataclasses.dataclass
@@ -381,7 +390,8 @@ def pool_shardings(cfg, n_slots: int, max_len: int, max_new_cap: int,
                                     mode="abstract"),
             row_axis=sh.SLOT) if draft_cfg is not None else None),
         slot_accepted=vec, slot_windows=vec,
-        priority=vec, deadline=vec)
+        priority=vec, deadline=vec,
+        slot_layers=vec, slot_decodes=vec)
 
 
 # =========================== scheduler ======================================
@@ -575,6 +585,10 @@ class DecodeScheduler:
         #                               segment, so post-harvest
         #                               active_count misses it)
         self.preemptions = 0          # preempt_slots victims (SLO layer)
+        # adaptive-depth run totals, accumulated host-side at harvest
+        # (slot counters recycle with their slot)
+        self.depth_layers = 0         # Σ decoder blocks applied
+        self.depth_tokens = 0         # Σ decode tokens they cover
 
         self.pool = self._init_pool()
         # chunked admission runs NO model forward: assign registers +
@@ -624,7 +638,9 @@ class DecodeScheduler:
             slot_accepted=jnp.zeros((n,), jnp.int32),
             slot_windows=jnp.zeros((n,), jnp.int32),
             priority=jnp.zeros((n,), jnp.int32),
-            deadline=jnp.full((n,), jnp.inf, jnp.float32))
+            deadline=jnp.full((n,), jnp.inf, jnp.float32),
+            slot_layers=jnp.zeros((n,), jnp.int32),
+            slot_decodes=jnp.zeros((n,), jnp.int32))
         if self.rules is not None and self.mesh is not None \
                 and self.mesh.size > 1:
             shd = pool_shardings(self.cfg, n, self.max_len, cap,
@@ -726,7 +742,11 @@ class DecodeScheduler:
                 keys=sreg(pool.keys, rkeys),
                 out=sreg(pool.out, jnp.zeros_like(pool.out)),
                 priority=sreg(pool.priority, prios),
-                deadline=sreg(pool.deadline, deadlines))
+                deadline=sreg(pool.deadline, deadlines),
+                slot_layers=sreg(pool.slot_layers,
+                                 jnp.zeros((n,), jnp.int32)),
+                slot_decodes=sreg(pool.slot_decodes,
+                                  jnp.zeros((n,), jnp.int32)))
 
         return admit
 
@@ -804,7 +824,11 @@ class DecodeScheduler:
                 prefix=(pool.prefix if prefix is None
                         else sreg(pool.prefix, prefix)),
                 priority=sreg(pool.priority, prios),
-                deadline=sreg(pool.deadline, deadlines))
+                deadline=sreg(pool.deadline, deadlines),
+                slot_layers=sreg(pool.slot_layers,
+                                 jnp.zeros((n,), jnp.int32)),
+                slot_decodes=sreg(pool.slot_decodes,
+                                  jnp.zeros((n,), jnp.int32)))
 
         return assign
 
@@ -846,7 +870,9 @@ class DecodeScheduler:
                 n_emitted=jnp.where(mask, 0, pool.n_emitted),
                 cur_len=jnp.where(mask, 1, pool.cur_len),
                 pf_pos=jnp.where(mask, 0, pool.pf_pos),
-                plen=jnp.where(mask, 0, pool.plen))
+                plen=jnp.where(mask, 0, pool.plen),
+                slot_layers=jnp.where(mask, 0, pool.slot_layers),
+                slot_decodes=jnp.where(mask, 0, pool.slot_decodes))
 
         return preempt
 
@@ -933,9 +959,15 @@ class DecodeScheduler:
             # freed tables drop it); chunked mode must NOT — a
             # mid-prefill slot's stale cur_len points INTO its
             # already-written prompt — so the append is gated.
-            logits, cache = engine.decode_step(
+            # Adaptive early exit: only emitting rows keep the dynamic
+            # layer loop alive (retired / mid-prefill slots start
+            # halted and pay no block FLOPs). `depth` feeds the
+            # per-slot mean-depth stats either way (== n_layers for
+            # static-depth pools).
+            logits, cache, depth = engine.decode_step(
                 params, cfg, tok[:, None], cache, p.cur_len, rules,
-                write_mask=emit if chunked else None)
+                write_mask=emit if chunked else None,
+                live=emit if cfg.early_exit else None, with_depth=True)
             keys = sampling_lib.step_keys(p.keys, n_emitted)
             nxt = sampling_lib.sample_slots(logits[:, 0], keys, sp)
             return dataclasses.replace(
@@ -947,7 +979,10 @@ class DecodeScheduler:
                 done=p.done | finished,
                 out=out,
                 slot_steps=p.slot_steps
-                + jnp.sum(emit).astype(jnp.int32))
+                + jnp.sum(emit).astype(jnp.int32),
+                slot_layers=p.slot_layers
+                + jnp.where(emit, depth, 0).astype(jnp.int32),
+                slot_decodes=p.slot_decodes + emit.astype(jnp.int32))
 
         def spec_decode_fn(params, dparams, p: SlotPool) -> SlotPool:
             """One draft-k/verify-once iteration for every running slot.
@@ -983,11 +1018,15 @@ class DecodeScheduler:
                 # re-feeds (and rewrites) everything past the accept
                 # point, keeping draft and target caches aligned
                 # without rollback.
+                # A draft with cfg.early_exit set drafts at adaptive
+                # (shallow) depth — the natural cheap drafter — while
+                # the target verify below stays full-depth exact.
                 draft, toks, tok = p.draft, [], t0
                 for j in range(k + 1):
                     dl, draft = engine.decode_step(
                         dparams, d_cfg, tok[:, None], draft,
-                        p.cur_len + j, rules, write_mask=emit)
+                        p.cur_len + j, rules, write_mask=emit,
+                        live=emit if d_cfg.early_exit else None)
                     tok = jnp.argmax(dl[:, 0], axis=-1).astype(jnp.int32)
                     if j < k:
                         toks.append(tok)
@@ -1034,7 +1073,14 @@ class DecodeScheduler:
                 + jnp.sum(emit).astype(jnp.int32),
                 slot_accepted=p.slot_accepted
                 + jnp.where(emit, m - 1, 0).astype(jnp.int32),
-                slot_windows=p.slot_windows + emit.astype(jnp.int32))
+                slot_windows=p.slot_windows + emit.astype(jnp.int32),
+                # verify_step always runs the TARGET at full depth (the
+                # exactness anchor: adaptive shallow exits belong on
+                # the DRAFT side, via draft_cfg.early_exit), so every
+                # emitted token here cost n_layers target blocks.
+                slot_layers=p.slot_layers
+                + jnp.where(emit, m * cfg.n_layers, 0).astype(jnp.int32),
+                slot_decodes=p.slot_decodes + m.astype(jnp.int32))
 
         def step(params, dparams, pool: SlotPool, want,
                  max_steps) -> SlotPool:
@@ -1482,14 +1528,20 @@ class DecodeScheduler:
         out = np.asarray(self.pool.out)
         n_emitted = np.asarray(self.pool.n_emitted)
         rids = np.asarray(self.pool.request_id)
+        slayers = np.asarray(self.pool.slot_layers)
+        sdecodes = np.asarray(self.pool.slot_decodes)
         got = []
         for slot in np.nonzero(done)[0]:
             length = int(n_emitted[slot])
             toks = out[slot, :length].copy()
             hit_eos = length > 0 and int(toks[-1]) == self.eos_id
+            dl, dt = int(slayers[slot]), int(sdecodes[slot])
             got.append(FinishedRequest(
                 request_id=int(rids[slot]), tokens=toks, length=length,
-                text_length=length - int(hit_eos), hit_eos=hit_eos))
+                text_length=length - int(hit_eos), hit_eos=hit_eos,
+                mean_depth=dl / dt if dt else 0.0))
+            self.depth_layers += dl
+            self.depth_tokens += dt
             self.tokens_emitted += length
             self._busy[slot] = False
             self._slot_req[slot] = None
@@ -1676,6 +1728,8 @@ class DecodeScheduler:
         self.prefix_hit_blocks = 0
         self.prefix_evictions = 0
         self.preemptions = 0
+        self.depth_layers = 0
+        self.depth_tokens = 0
 
         def z(a):
             return None if a is None else a * 0
@@ -1685,7 +1739,9 @@ class DecodeScheduler:
             steps=self.pool.steps * 0,
             slot_steps=self.pool.slot_steps * 0,
             slot_accepted=z(self.pool.slot_accepted),
-            slot_windows=z(self.pool.slot_windows))
+            slot_windows=z(self.pool.slot_windows),
+            slot_layers=z(self.pool.slot_layers),
+            slot_decodes=z(self.pool.slot_decodes))
 
     def run_until_drained(self) -> List[FinishedRequest]:
         """Drive until queue and pool are empty; returns all finished."""
@@ -1777,3 +1833,26 @@ class DecodeScheduler:
         a = np.asarray(self.pool.slot_accepted, np.float64)
         w = np.asarray(self.pool.slot_windows, np.float64)
         return a / np.maximum(w, 1.0)
+
+    # ---------------- adaptive-depth stats ------------------------------
+
+    @property
+    def mean_depth(self) -> float:
+        """Mean decoder blocks applied per decode token across the run:
+        harvested requests' totals plus the still-resident slots'
+        counters. == cfg.n_layers for static-depth pools; < n_layers
+        when adaptive early exit / mixture-of-depths skipped blocks
+        (``models.adaptive``)."""
+        dl = self.depth_layers + int(np.asarray(self.pool.slot_layers,
+                                                np.int64).sum())
+        dt = self.depth_tokens + int(np.asarray(self.pool.slot_decodes,
+                                                np.int64).sum())
+        return dl / dt if dt else 0.0
+
+    def slot_mean_depth(self) -> np.ndarray:
+        """Per-slot mean depth over that slot's CURRENT residency
+        (counters recycle at admission; harvested totals live in
+        ``depth_layers``/``depth_tokens``)."""
+        a = np.asarray(self.pool.slot_layers, np.float64)
+        d = np.asarray(self.pool.slot_decodes, np.float64)
+        return a / np.maximum(d, 1.0)

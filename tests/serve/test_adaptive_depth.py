@@ -1,0 +1,308 @@
+"""Adaptive per-token depth (early exit + mixture-of-depths):
+correctness pins for ``models.adaptive`` + ``transformer.decode_layers``.
+
+The load-bearing invariants:
+
+- **Threshold = ∞ is bit-identical** to the non-adaptive engine — the
+  full halt machinery runs (vector-predicate while loop, margin checks,
+  KV-fill tail) but no row ever halts, so every op matches the static
+  scan. Pinned batch-synchronously for dense AND moe, and through the
+  scheduler with queueing (8 requests into 2 slots).
+- **Halting is monotone**: ``decode_layers`` ORs the halt vector, so a
+  halt signal that fires once and then goes quiet halts the row
+  permanently — same result as a sticky signal.
+- **Skipped-layer KV propagation is exact**: with the tail of the
+  stack constructed as an identity (zeroed block outputs), early-exit
+  decode at the matching floor is bit-identical to full depth AND to a
+  host-truncated model — later tokens attend to the filled K/V slots.
+- **The MoD router trains**: gradient flows to routed layers' router
+  weights and to no others.
+- **The decode layer loop is impl-agnostic**: scan / paper_while /
+  unroll produce bitwise-equal decode logits (the adaptive while path
+  must be a drop-in for all three).
+- **Depth stats are exact** through the scheduler's per-slot counters.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_zoo, transformer
+from repro.serve import engine
+from repro.serve import scheduler as sched_lib
+
+KEY = jax.random.PRNGKey(17)
+PROMPT, MAX_NEW, SLOTS = 16, 8, 2
+
+
+@pytest.fixture(scope="module", params=["smollm-135m", "dbrx-132b"])
+def model(request):
+    cfg = get_config(request.param, smoke=True)
+    return cfg, model_zoo.init_params(cfg, KEY)
+
+
+def _prompts(cfg, n=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(2, cfg.vocab, (n, PROMPT)), jnp.int32)
+
+
+def _identity_tail(params, e):
+    """Zero block outputs from layer ``e`` on: exact identity layers."""
+    out = jax.tree.map(lambda x: x, params)
+    out["layers"] = dict(out["layers"])
+    out["layers"]["attn"] = dict(out["layers"]["attn"])
+    out["layers"]["mlp"] = dict(out["layers"]["mlp"])
+    out["layers"]["attn"]["wo"] = out["layers"]["attn"]["wo"].at[e:].set(0.0)
+    out["layers"]["mlp"]["w_down"] = (
+        out["layers"]["mlp"]["w_down"].at[e:].set(0.0))
+    return out
+
+
+# =========================== threshold = ∞ ==================================
+
+def test_inf_threshold_bit_identical_batch_sync(model):
+    """early_exit with the default ∞ threshold engages the dynamic
+    loop but must reproduce the static engine bit for bit."""
+    cfg, params = model
+    prompts = _prompts(cfg)
+    base = engine.generate_batch_sync(params, cfg, prompts,
+                                      max_new=MAX_NEW, eos_id=1)
+    acfg = dataclasses.replace(cfg, early_exit=True)
+    assert acfg.exit_threshold == float("inf")
+    ada = engine.generate_batch_sync(params, acfg, prompts,
+                                     max_new=MAX_NEW, eos_id=1)
+    np.testing.assert_array_equal(np.asarray(ada.tokens),
+                                  np.asarray(base.tokens))
+    np.testing.assert_array_equal(np.asarray(ada.lengths),
+                                  np.asarray(base.lengths))
+
+
+def test_inf_threshold_bit_identical_through_scheduler(model):
+    """Same pin through continuous batching with queueing: 8 requests
+    into 2 slots, admission waves and retirement included. Depth
+    stats must read exactly n_layers — no row ever halted."""
+    cfg, params = model
+    prompts = [np.asarray(p) for p in _prompts(cfg, n=8, seed=5)]
+    sync = engine.generate_batch_sync(params, cfg, np.stack(prompts),
+                                      max_new=MAX_NEW, eos_id=1)
+    acfg = dataclasses.replace(cfg, early_exit=True)
+    sched = sched_lib.DecodeScheduler(
+        params, acfg, n_slots=SLOTS, prompt_len=PROMPT,
+        max_new_cap=MAX_NEW, eos_id=1)
+    out = {}
+    for rid, p in enumerate(prompts):
+        sched.submit(p[None, :], max_new=MAX_NEW, request_id=rid)
+    while sched.pending:
+        for f in sched.step():
+            out[f.request_id] = f
+    for rid in range(len(prompts)):
+        np.testing.assert_array_equal(
+            out[rid].tokens,
+            np.asarray(sync.tokens[rid, :out[rid].length]))
+        assert out[rid].length == int(sync.lengths[rid])
+        assert out[rid].mean_depth == float(cfg.n_layers)
+    assert sched.mean_depth == float(cfg.n_layers)
+
+
+# =========================== halt monotonicity ==============================
+
+def _toy_loop(halt_fn, live=None, n=6, B=3, cfg=None):
+    """decode_layers on a synthetic stack: each applied block adds 1 to
+    x (so x == depth), block leaves get +1, fill leaves get +10."""
+    cfg = cfg or get_config("smollm-135m", smoke=True)
+    stacked = {"w": jnp.zeros((n,))}
+    leaves = jnp.zeros((n, B))
+    x0 = jnp.zeros((B, 1, 4))
+
+    def block_fn(lp, lv, x, i):
+        return x + 1.0, lv + 1.0, jnp.ones((B,), bool)
+
+    def kv_fill_fn(lp, lv, x, i):
+        return lv + 10.0
+
+    return transformer.decode_layers(
+        stacked, x0, leaves, cfg, block_fn=block_fn, halt_fn=halt_fn,
+        kv_fill_fn=kv_fill_fn, live=live)
+
+
+def test_halt_monotone_and_kv_fill_coverage():
+    """A halt signal that fires at exactly one layer and then goes
+    quiet must behave like a sticky (>=) signal: decode_layers ORs it
+    into the carry. Also pins depth accounting and the fill tail:
+    every layer's leaves were written by exactly one of block / fill."""
+    n = 6
+    targets = jnp.asarray([1, 3, 4])
+    x_p, lv_p, d_p = _toy_loop(lambda x, i: i == targets, n=n)   # pulse
+    x_s, lv_s, d_s = _toy_loop(lambda x, i: i >= targets, n=n)   # sticky
+    np.testing.assert_array_equal(np.asarray(d_p), np.asarray(d_s))
+    np.testing.assert_array_equal(np.asarray(x_p), np.asarray(x_s))
+    np.testing.assert_array_equal(np.asarray(lv_p), np.asarray(lv_s))
+    # row halts after layer target -> target+1 blocks applied
+    np.testing.assert_array_equal(np.asarray(d_p), [2, 4, 5])
+    np.testing.assert_array_equal(np.asarray(x_p)[:, 0, 0], [2., 4., 5.])
+    # loop exits once ALL rows halt (after layer max(targets)); the
+    # fill tail covers the rest — block wrote layers 0..4, fill layer 5
+    np.testing.assert_array_equal(np.asarray(lv_p),
+                                  [[1.] * 3] * 5 + [[10.] * 3])
+
+
+def test_live_mask_rows_start_halted():
+    """live=False rows (retired / mid-prefill slots) never apply a
+    block and never extend the loop, but still get every layer's KV."""
+    targets = jnp.asarray([2, 2, 0])
+    live = jnp.asarray([True, True, False])
+    x, lv, d = _toy_loop(lambda x, i: i >= targets, live=live)
+    np.testing.assert_array_equal(np.asarray(d), [3, 3, 0])
+    np.testing.assert_array_equal(np.asarray(x)[:, 0, 0], [3., 3., 0.])
+    # block ran layers 0..2 (until all live rows halted), fill 3..5
+    np.testing.assert_array_equal(np.asarray(lv),
+                                  [[1.] * 3] * 3 + [[10.] * 3] * 3)
+
+
+# =========================== skipped-layer KV ===============================
+
+def test_skipped_layer_kv_propagation_exact():
+    """Identity tail from layer 2 of 4: early exit at the layer-2
+    floor must reproduce full depth bitwise — including every token
+    whose attention READS the K/V slots the fill tail wrote — and both
+    must equal a host-truncated 2-layer model (the depth really is 2)."""
+    cfg = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                              n_layers=4)
+    params = _identity_tail(model_zoo.init_params(cfg, KEY), 2)
+    prompts = _prompts(cfg)
+    full = engine.generate_batch_sync(params, cfg, prompts,
+                                      max_new=MAX_NEW, eos_id=1)
+    acfg = dataclasses.replace(cfg, early_exit=True,
+                               exit_threshold=-1.0, exit_min_layers=2)
+    ada = engine.generate_batch_sync(params, acfg, prompts,
+                                     max_new=MAX_NEW, eos_id=1)
+    np.testing.assert_array_equal(np.asarray(ada.tokens),
+                                  np.asarray(full.tokens))
+    # host reference with the tail physically removed
+    tcfg = dataclasses.replace(cfg, n_layers=2)
+    tparams = dict(params)
+    tparams["layers"] = jax.tree.map(lambda a: a[:2], params["layers"])
+    trunc = engine.generate_batch_sync(tparams, tcfg, prompts,
+                                       max_new=MAX_NEW, eos_id=1)
+    np.testing.assert_array_equal(np.asarray(ada.tokens),
+                                  np.asarray(trunc.tokens))
+
+
+# =========================== mixture of depths ==============================
+
+def test_mod_router_gradient_flows_to_routed_layers_only():
+    """The router weight must sit in the differentiable path (top-k
+    selection alone would starve it): routed layers get nonzero
+    gradient, non-routed layers exactly zero."""
+    cfg = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                              n_layers=4, mod_capacity=0.5)
+    params = model_zoo.init_params(cfg, KEY)
+    assert params["layers"]["router"]["w"].shape == (4, cfg.d_model)
+    rng = np.random.default_rng(0)
+    tok = rng.integers(2, cfg.vocab, (2, PROMPT + 1)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(tok[:, :-1]),
+             "labels": jnp.asarray(tok[:, 1:])}
+    grads = jax.grad(
+        lambda p: model_zoo.loss_fn(p, cfg, batch)[0])(params)
+    g = np.asarray(grads["layers"]["router"]["w"], np.float32)
+    for i in range(cfg.n_layers):
+        if i % cfg.mod_every == cfg.mod_every - 1:   # routed
+            assert np.abs(g[i]).max() > 0.0, f"layer {i} router starved"
+        else:
+            np.testing.assert_array_equal(g[i], 0.0)
+
+
+def test_mod_scheduler_matches_batch_sync():
+    """MoD decode routing is identical between the batch-synchronous
+    engine and the scheduler (same mod_apply_decode in both loops)."""
+    cfg = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                              mod_capacity=0.5)
+    params = model_zoo.init_params(cfg, KEY)
+    prompts = [np.asarray(p) for p in _prompts(cfg, n=6, seed=5)]
+    sync = engine.generate_batch_sync(params, cfg, np.stack(prompts),
+                                      max_new=MAX_NEW, eos_id=1)
+    sched = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=SLOTS, prompt_len=PROMPT,
+        max_new_cap=MAX_NEW, eos_id=1)
+    out = {}
+    for rid, p in enumerate(prompts):
+        sched.submit(p[None, :], max_new=MAX_NEW, request_id=rid)
+    while sched.pending:
+        for f in sched.step():
+            out[f.request_id] = f
+    for rid in range(len(prompts)):
+        np.testing.assert_array_equal(
+            out[rid].tokens,
+            np.asarray(sync.tokens[rid, :out[rid].length]))
+
+
+def test_validate_rejects_bad_configs():
+    from repro.models import adaptive
+    base = get_config("smollm-135m", smoke=True)
+    for bad in (dict(early_exit=True, exit_min_layers=0),
+                dict(early_exit=True, exit_min_layers=99),
+                dict(mod_capacity=1.5),
+                dict(mod_capacity=0.5, mod_every=1)):
+        with pytest.raises(ValueError):
+            adaptive.validate(dataclasses.replace(base, **bad))
+    mamba = get_config("falcon-mamba-7b", smoke=True)
+    with pytest.raises(ValueError):
+        adaptive.validate(dataclasses.replace(mamba, early_exit=True))
+
+
+# =========================== layer-loop parity ==============================
+
+def test_decode_layer_loop_impl_parity():
+    """scan / paper_while / unroll decode logits are bitwise equal —
+    the paper's dynamic loop is a drop-in for the static scan, and the
+    adaptive while path inherits whichever the config picked."""
+    cfg = get_config("smollm-135m", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    prompts = _prompts(cfg)
+    outs = {}
+    for impl in ("scan", "paper_while", "unroll"):
+        c = dataclasses.replace(cfg, layer_loop=impl)
+        cache = engine.make_cache(c, prompts.shape[0], PROMPT + 4)
+        logits, cache = engine.prefill(params, c, prompts, cache)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        step_logits, _ = engine.decode_step(params, c, tok, cache,
+                                            jnp.int32(PROMPT + 1))
+        outs[impl] = np.asarray(step_logits, np.float32)
+    np.testing.assert_array_equal(outs["scan"], outs["paper_while"])
+    # unroll inlines every block, so XLA fuses the bf16 math
+    # differently — logits agree to compute-dtype rounding and the
+    # greedy decision is identical, but bitwise is not a contract there
+    np.testing.assert_allclose(outs["scan"], outs["unroll"], atol=0.06)
+    np.testing.assert_array_equal(outs["scan"].argmax(-1),
+                                  outs["unroll"].argmax(-1))
+
+
+# =========================== depth statistics ===============================
+
+def test_scheduler_depth_stats_exact():
+    """Per-slot depth counters: threshold -1 with a min-layer floor of
+    1 halts every row after exactly one block, so every request's
+    mean_depth and the aggregate must read exactly 1.0; reset clears."""
+    cfg = get_config("smollm-135m", smoke=True)
+    params = model_zoo.init_params(cfg, KEY)
+    acfg = dataclasses.replace(cfg, early_exit=True,
+                               exit_threshold=-1.0, exit_min_layers=1)
+    sched = sched_lib.DecodeScheduler(
+        params, acfg, n_slots=SLOTS, prompt_len=PROMPT,
+        max_new_cap=MAX_NEW, eos_id=-1)
+    prompts = [np.asarray(p) for p in _prompts(cfg, n=5, seed=5)]
+    done = []
+    for rid, p in enumerate(prompts):
+        sched.submit(p[None, :], max_new=MAX_NEW, request_id=rid)
+    while sched.pending:
+        done += sched.step()
+    assert len(done) == len(prompts)
+    for f in done:
+        assert f.mean_depth == 1.0
+    assert sched.mean_depth == 1.0
+    sched.reset_stats()
+    assert sched.mean_depth == 0.0

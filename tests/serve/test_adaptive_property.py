@@ -1,0 +1,121 @@
+"""Property tests for adaptive depth (hypothesis; skipped when the
+optional dep is absent).
+
+Two properties the example-based tests can only spot-check:
+
+1. For ARBITRARY per-row exit layers, the dynamic
+   ``transformer.decode_layers`` loop computes exactly what a host
+   Python reference computes — per-row residual stream, per-row depth,
+   and which layers' KV leaves were written by the block vs the fill
+   tail. The halt signal is injected (``i >= target``), so the search
+   space is the loop machinery itself, not the margin check.
+
+2. The scheduler's depth statistic (``slot_layers / slot_decodes``
+   accumulated under the emit mask, harvested per request) equals the
+   plain average of the per-step depths of emitted tokens — for any
+   interleaving of emit masks and depth vectors.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install repro[test]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.models import transformer  # noqa: E402
+
+CFG = dataclasses.replace(get_config("smollm-135m", smoke=True))
+
+
+def _host_reference(targets, live, n):
+    """Pure-Python model of the adaptive loop on the toy stack where
+    each applied block adds 1 to x, block leaves get +1, fill +10."""
+    B = len(targets)
+    halted = [not lv for lv in live]
+    depth = [0] * B
+    leaves = np.zeros((n, B))
+    i = 0
+    while i < n and not all(halted):
+        for b in range(B):
+            if not halted[b]:
+                depth[b] += 1
+        leaves[i] += 1.0                       # block writes every row
+        for b in range(B):
+            if i >= targets[b]:
+                halted[b] = True               # monotone OR
+        i += 1
+    leaves[i:] += 10.0                         # fill tail, every row
+    return np.asarray(depth), leaves
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    targets=st.lists(st.integers(0, 8), min_size=1, max_size=4),
+    live=st.data(),
+    n=st.integers(1, 6),
+)
+def test_arbitrary_exit_layers_match_host_reference(targets, live, n):
+    B = len(targets)
+    live_mask = live.draw(
+        st.lists(st.booleans(), min_size=B, max_size=B))
+    t = jnp.asarray(targets)
+    stacked = {"w": jnp.zeros((n,))}
+    leaves0 = jnp.zeros((n, B))
+    x0 = jnp.zeros((B, 1, 4))
+
+    def block_fn(lp, lv, x, i):
+        return x + 1.0, lv + 1.0, jnp.ones((B,), bool)
+
+    def kv_fill_fn(lp, lv, x, i):
+        return lv + 10.0
+
+    x, lv, depth = transformer.decode_layers(
+        stacked, x0, leaves0, CFG, block_fn=block_fn,
+        halt_fn=lambda x, i: i >= t, kv_fill_fn=kv_fill_fn,
+        live=jnp.asarray(live_mask))
+    ref_depth, ref_leaves = _host_reference(targets, live_mask, n)
+    np.testing.assert_array_equal(np.asarray(depth), ref_depth)
+    # x counts applied blocks per row — must equal depth exactly
+    np.testing.assert_array_equal(np.asarray(x)[:, 0, 0],
+                                  ref_depth.astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(lv), ref_leaves)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_mean_depth_accumulation_matches_plain_average(data):
+    """The scheduler's update (slot_layers += where(emit, depth, 0);
+    slot_decodes += emit) must yield exactly mean(depth over emitted
+    steps) per slot, and the harvested aggregate must equal the grand
+    mean — for any emit/depth history."""
+    n_slots = data.draw(st.integers(1, 4))
+    steps = data.draw(st.integers(1, 12))
+    depth = np.asarray(data.draw(st.lists(
+        st.lists(st.integers(1, 32), min_size=n_slots, max_size=n_slots),
+        min_size=steps, max_size=steps)), np.int32)
+    emit = np.asarray(data.draw(st.lists(
+        st.lists(st.booleans(), min_size=n_slots, max_size=n_slots),
+        min_size=steps, max_size=steps)), bool)
+
+    slot_layers = np.zeros((n_slots,), np.int64)
+    slot_decodes = np.zeros((n_slots,), np.int64)
+    for s in range(steps):
+        slot_layers += np.where(emit[s], depth[s], 0)
+        slot_decodes += emit[s].astype(np.int64)
+
+    for b in range(n_slots):
+        emitted = depth[:, b][emit[:, b]]
+        want = emitted.mean() if emitted.size else 0.0
+        got = (slot_layers[b] / slot_decodes[b]
+               if slot_decodes[b] else 0.0)
+        assert got == pytest.approx(want)
+    total = depth[emit]
+    grand = total.mean() if total.size else 0.0
+    agg = (slot_layers.sum() / slot_decodes.sum()
+           if slot_decodes.sum() else 0.0)
+    assert agg == pytest.approx(grand)

@@ -10,7 +10,15 @@ arranged so every interaction actually fires: duplicate prompts map
 pinned prefix blocks (hits), distinct prompts overflow the pin budget
 (LRU evictions), and more requests than slots exercise queueing while
 speculative windows run the decode.
+
+Adaptive depth (test_adaptive_depth) joins the stack here too: the
+∞-threshold early-exit config must ride chunked prefill + prefix cache
++ speculation without perturbing a bit, and a finite threshold on an
+identity-tail model must stay exact through the same gauntlet while
+the depth counters read the constructed depth.
 """
+
+import dataclasses
 
 import jax
 import numpy as np
@@ -107,6 +115,68 @@ def test_chunked_plus_spec_dense_bit_identical(smollm):
     out = _drain(sched, prompts)
     _check(out, sync, len(prompts))
     assert sched.spec_windows > 0
+
+
+def test_all_three_plus_early_exit_inf_bit_identical(smollm):
+    """All three features PLUS ∞-threshold early exit: the halt
+    machinery (margin checks, vector-predicate while, KV-fill tail)
+    rides the full stack without perturbing a bit, and the depth
+    stats read full depth everywhere."""
+    cfg, params = smollm
+    acfg = dataclasses.replace(cfg, early_exit=True)
+    prompts = _prompts(cfg)
+    sync = engine.generate_batch_sync(
+        params, cfg, np.stack(prompts), max_new=MAX_NEW, eos_id=1)
+    sched = sched_lib.DecodeScheduler(
+        params, acfg, n_slots=SLOTS, prompt_len=PROMPT,
+        max_new_cap=MAX_NEW, eos_id=1, kv="paged", kv_block=BLOCK,
+        kv_blocks=SLOTS * NEED + 2, prefill="chunked", chunk_tokens=5,
+        prefix_cache=True,
+        speculative=spec_lib.SpecConfig(k=3, drafter="ngram", ngram=2))
+    out = _drain(sched, prompts)
+    _check(out, sync, len(prompts))
+    assert sched.spec_windows > 0
+    assert sched.prefix_hit_blocks > 0
+    # the speculative verify pass is always full-depth (adaptive depth
+    # belongs on the draft side), so the stat must read n_layers
+    assert sched.mean_depth == float(cfg.n_layers)
+
+
+def test_finite_threshold_composes_exactly(smollm):
+    """Finite early exit through chunked prefill + prefix cache +
+    queueing on an identity-tail model (layers 2..3 zeroed -> exits at
+    depth 2 are exact): streams equal the full-depth reference and the
+    depth counters read exactly 2.0 — the halted rows' skipped-layer
+    K/V wrote what the full pass would have, through the shared paged
+    block table and across preempt/retire churn."""
+    cfg, _ = smollm
+    cfg4 = dataclasses.replace(cfg, n_layers=4)
+    params = model_zoo.init_params(cfg4, KEY)
+    params = jax.tree.map(lambda x: x, params)
+    params["layers"] = dict(params["layers"])
+    params["layers"]["attn"] = dict(params["layers"]["attn"])
+    params["layers"]["mlp"] = dict(params["layers"]["mlp"])
+    params["layers"]["attn"]["wo"] = (
+        params["layers"]["attn"]["wo"].at[2:].set(0.0))
+    params["layers"]["mlp"]["w_down"] = (
+        params["layers"]["mlp"]["w_down"].at[2:].set(0.0))
+    acfg = dataclasses.replace(cfg4, early_exit=True,
+                               exit_threshold=-1.0, exit_min_layers=2)
+    prompts = _prompts(cfg4)
+    sync = engine.generate_batch_sync(
+        params, cfg4, np.stack(prompts), max_new=MAX_NEW, eos_id=1)
+    # ceil((16 + 8 + 1) / 4) = 7 blocks per resident request, 4 layers
+    sched = sched_lib.DecodeScheduler(
+        params, acfg, n_slots=SLOTS, prompt_len=PROMPT,
+        max_new_cap=MAX_NEW, eos_id=1, kv="paged", kv_block=BLOCK,
+        kv_blocks=SLOTS * NEED + 2, prefill="chunked", chunk_tokens=5,
+        prefix_cache=True)
+    out = _drain(sched, prompts)
+    _check(out, sync, len(prompts))
+    assert sched.prefix_hit_blocks > 0
+    assert sched.mean_depth == 2.0
+    for f in out.values():
+        assert f.mean_depth == 2.0
 
 
 def test_all_three_under_slo_preemption(smollm):

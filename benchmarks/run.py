@@ -18,7 +18,8 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> None:
-    from . import (bench_adaptive_depth, bench_chunked_prefill, bench_dqn,
+    from . import (bench_adaptive_depth, bench_chunked_prefill,
+                   bench_disagg, bench_dqn,
                    bench_loop_overhead, bench_loop_scaling,
                    bench_memory_swap, bench_model_parallel,
                    bench_paged_attention, bench_paged_kv,
@@ -42,6 +43,7 @@ def main() -> None:
         ("SpecDecode", bench_spec_decode),
         ("AdaptiveDepth", bench_adaptive_depth),
         ("SLO", bench_slo),
+        ("Disagg", bench_disagg),
         ("Roofline", roofline_report),
     ]
     ap = argparse.ArgumentParser()

@@ -31,6 +31,7 @@ __all__ = [
     "KV_HEADS", "HEAD_DIM", "VOCAB", "EXPERT", "EXPERT_MLP", "INNER",
     "STATE", "LAYERS", "CACHE_KV", "CACHE_HD", "STAGE", "SLOT", "BLOCK",
     "ShardingRules", "resolve_rules", "constrain", "logical_to_sharding",
+    "carve_slices", "slice_mesh", "transfer_sharding",
 ]
 
 # --------------------------- logical axes -----------------------------------
@@ -223,6 +224,80 @@ def constrain(x: jax.Array, rules: Optional[ShardingRules],
     spec = rules.spec(logical_spec, dims=tuple(x.shape))
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(rules.mesh, spec))
+
+
+# --------------------------- mesh slices ------------------------------------
+# Disaggregated serving (repro.serve.disagg) carves ONE device fleet
+# into disjoint submeshes — a prefill slice and a decode slice — and
+# ships finished KV blocks between them. The paper's device-placement
+# story (loop bodies partitioned across device SETS, §3) applied at the
+# mesh level: each slice gets its own Mesh + ShardingRules, and model
+# code stays slice-agnostic because it only ever names logical axes.
+
+
+def carve_slices(n_first: int, devices=None):
+    """Split a device list into two disjoint contiguous slices.
+
+    Returns ``(first, rest)`` — the leading ``n_first`` devices and the
+    remainder. Contiguity matters: on real hardware neighbouring device
+    ids share ICI links, so each slice keeps its fast interconnect and
+    only the block shipment crosses the slice boundary. ``devices``
+    defaults to ``jax.devices()`` (locally visible + addressable-first
+    order under multi-process ``jax.distributed``).
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    if not 0 < n_first < len(devices):
+        raise ValueError(
+            f"carve_slices(n_first={n_first}) needs 0 < n_first < "
+            f"{len(devices)} devices (both slices must be non-empty)")
+    return devices[:n_first], devices[n_first:]
+
+
+def slice_mesh(devices, axes=("data",), shape=None) -> Mesh:
+    """Build a Mesh over an EXPLICIT device subset.
+
+    ``jax.make_mesh`` always spans the whole fleet; a slice mesh must
+    not, so this goes through ``Mesh`` directly with the devices
+    reshaped to ``shape`` (default: 1-D over a single axis). The
+    AxisType guard mirrors ``launch.mesh._mesh``: jax < 0.5 has no
+    axis_types (everything is Auto there); newer versions need Auto
+    spelled out to keep GSPMD auto-propagation on the slice.
+    """
+    import numpy as _np
+    devices = list(devices)
+    axes = tuple(axes)
+    shape = (len(devices),) if shape is None else tuple(shape)
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} / axes {axes} rank mismatch")
+    n = 1
+    for s in shape:
+        n *= s
+    if n != len(devices):
+        raise ValueError(
+            f"shape {shape} wants {n} devices, got {len(devices)}")
+    arr = _np.array(devices, dtype=object).reshape(shape)
+    if hasattr(jax.sharding, "AxisType"):
+        return Mesh(arr, axes,
+                    axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return Mesh(arr, axes)
+
+
+def transfer_sharding(rules: ShardingRules, mesh: Mesh,
+                      dims) -> NamedSharding:
+    """Destination sharding for a shipped KV-block buffer.
+
+    The wire format is ``(L, R, n_cols, block, KV, hd)`` — layers,
+    shipped rows, table columns, block, kv heads, head dim
+    (``PagedKVCache.export_rows``). Placement matches the DESTINATION
+    pool's K/V pools on the head axes (``CACHE_KV``/``CACHE_HD`` — cut
+    when the slice mesh has a model axis) and keeps the tiny row/column
+    dims replicated, so ``jax.device_put`` lands each shard exactly
+    where ``import_rows``'s scatter consumes it — no resharding hop on
+    the decode slice. On a data-only slice mesh every axis drops
+    (divisibility) and the buffer is simply replicated over the slice.
+    """
+    return rules.sharding((LAYERS, None, None, None, CACHE_KV, CACHE_HD),
+                          mesh, dims=tuple(dims))
 
 
 def logical_to_sharding(axes: Any, rules: ShardingRules,

@@ -64,6 +64,20 @@ their first uncached block. Pair with ``--prompt-pool P`` to generate
 the repeated-prompt traffic it serves
 (``benchmarks/bench_prefix_cache.py`` measures admission-to-first-
 token and capacity at equal pool bytes).
+
+``--disagg`` serves through prefill/decode disaggregation
+(DESIGN.md §8.7): the device fleet is carved into a prefill slice and
+a decode slice (``--prefill-devices N`` sizes the first; default
+half), prompts chunk-prefill on the first while running slots decode
+undisturbed on the second, and finished KV blocks ship slice-to-slice
+asynchronously (``jax.device_put`` into the decode pool's sharding,
+double-buffered under the next round's prefill chunk). The report
+line names the transfer path that ran — ``device_put:dcn`` when
+``repro.launch.distributed`` initialized a multi-process fleet,
+``device_put:ics`` within one process, ``colocated`` for the
+single-tier schedulers. On one device both tiers share it (no
+protection, but bit-identical routing — CI's 8-virtual-device job
+exercises the real 4+4 split).
 """
 
 import argparse
@@ -75,7 +89,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.dist import sharding as sh
+from repro.launch import distributed as dist_env
 from repro.models import model_zoo
+from repro.serve import disagg as disagg_lib
 from repro.serve import engine, sampling
 from repro.serve import scheduler as sched_lib
 from repro.serve import speculative as spec_lib
@@ -176,6 +193,7 @@ def run_continuous(args, cfg, params, workload):
             "occupancy": sched.occupancy, "steps": sched.total_steps,
             "tokens": toks, "attn_impl": sched.attn_impl,
             "prefill_impl": sched.prefill_impl,
+            "transfer_impl": sched.transfer_impl,
             "prefix_hit_blocks": sched.prefix_hit_blocks,
             "prefix_evictions": sched.prefix_evictions,
             "accepted_tokens": sched.accepted_tokens,
@@ -184,6 +202,95 @@ def run_continuous(args, cfg, params, workload):
             "mean_accept_len": sched.mean_accept_len,
             "mean_depth": sched.mean_depth,
             "req_depth": req_depth}
+
+
+def run_disagg(args, cfg, params, workload):
+    """Two-tier prefill/decode disaggregation (DESIGN.md §8.7).
+
+    Carves the fleet into disjoint prefill/decode submeshes when more
+    than one device is visible (``--prefill-devices`` sizes the
+    prefill slice; default half) and drives the same arrival loop as
+    :func:`run_continuous` through ``DisaggScheduler`` — long-prompt
+    admission burns prefill-slice FLOPs only, so running slots'
+    inter-token latency stays flat (``benchmarks/bench_disagg.py``
+    measures the bound against colocated chunked prefill)."""
+    dist_env.init_distributed()  # no-op single-process; DCN otherwise
+    pf_mesh = de_mesh = None
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        n_pf = args.prefill_devices or n_dev // 2
+        pf_devs, de_devs = sh.carve_slices(n_pf)
+        pf_mesh = sh.slice_mesh(pf_devs)
+        de_mesh = sh.slice_mesh(de_devs)
+    cap = max(m for _, m in workload)
+    sp = sampling.SamplingParams(temperature=args.temperature,
+                                 top_k=args.top_k)
+    spec = None
+    if args.spec_k:
+        if args.spec_drafter == "model":
+            raise SystemExit("--disagg composes with the ngram "
+                             "drafter only (a draft model would need "
+                             "its own cache shipped across the slice "
+                             "boundary)")
+        spec = spec_lib.SpecConfig(k=args.spec_k,
+                                   drafter=args.spec_drafter,
+                                   ngram=args.spec_ngram)
+    sched = disagg_lib.DisaggScheduler(
+        params, cfg,
+        n_prefill_slots=args.prefill_slots or args.slots,
+        n_decode_slots=args.slots, prompt_len=args.prompt_len,
+        max_new_cap=cap, eos_id=args.eos_id, sampling=sp,
+        prefill_mesh=pf_mesh, decode_mesh=de_mesh, seed=args.seed,
+        kv_block=args.kv_block, decode_kv_blocks=args.kv_blocks,
+        chunk_tokens=args.chunk_tokens,
+        prefix_cache=args.prefix_cache, speculative=spec,
+        segment_steps=args.segment_steps)
+    rng = np.random.default_rng(args.seed)
+    pool_n = args.prompt_pool or len(workload)
+    pool = [rng.integers(2, cfg.vocab,
+                         (1, args.prompt_len)).astype(np.int32)
+            for _ in range(pool_n)]
+    prompts = {i: pool[i % pool_n] for i in range(len(workload))}
+    sched.warmup()
+
+    arrival_wall = {}
+    finish_wall = {}
+    t0 = time.perf_counter()
+    next_req = 0
+    idle_s = 0.0
+    while len(finish_wall) < len(workload):
+        now = time.perf_counter() - t0
+        while next_req < len(workload) and workload[next_req][0] <= now:
+            rid = sched.submit(prompts[next_req],
+                               max_new=workload[next_req][1],
+                               request_id=next_req)
+            arrival_wall[rid] = workload[next_req][0]
+            next_req += 1
+        if sched.pending == 0:
+            if next_req < len(workload):
+                gap = max(0.0, workload[next_req][0] - now)
+                time.sleep(gap)
+                idle_s += gap
+            continue
+        for f in sched.step(expect_arrivals=next_req < len(workload)):
+            finish_wall[f.request_id] = time.perf_counter() - t0
+    wall = time.perf_counter() - t0
+    busy = max(wall - idle_s, 1e-9)
+    lat = [finish_wall[r] - arrival_wall[r] for r in finish_wall]
+    toks = sched.tokens_emitted
+    return {"wall_s": wall, "busy_s": busy, "tok_s": toks / busy,
+            "p50_s": pctl(lat, 50), "p99_s": pctl(lat, 99),
+            "tokens": toks, "steps": sched.total_steps,
+            "prefill_steps": sched.prefill_steps,
+            "attn_impl": sched.attn_impl,
+            "prefill_impl": sched.prefill_impl,
+            "transfer_impl": sched.transfer_impl,
+            "transfers": sched.transfers,
+            "transfer_bytes": sched.transfer_bytes,
+            "preemptions": sched.preemptions,
+            "replay_mismatches": sched.replay_mismatches,
+            "prefill_devices": len(pf_mesh.devices.flat) if pf_mesh else 1,
+            "decode_devices": len(de_mesh.devices.flat) if de_mesh else 1}
 
 
 def run_stream(args, cfg, params, workload):
@@ -381,6 +488,19 @@ def main():
                     help="draw the workload's prompts from this many "
                          "distinct prompts (0 = all distinct); the "
                          "repeated-prompt traffic --prefix-cache serves")
+    ap.add_argument("--disagg", action="store_true",
+                    help="prefill/decode disaggregation (DESIGN.md "
+                         "§8.7): carve the fleet into a prefill slice "
+                         "and a decode slice, chunk-prefill prompts on "
+                         "the first, ship finished KV blocks to the "
+                         "second asynchronously; implies --kv paged "
+                         "--prefill chunked on both tiers")
+    ap.add_argument("--prefill-devices", type=int, default=0,
+                    help="--disagg: devices in the prefill slice "
+                         "(0 = half the fleet); the rest decode")
+    ap.add_argument("--prefill-slots", type=int, default=0,
+                    help="--disagg: prefill-tier slot count "
+                         "(0 = same as --slots)")
     ap.add_argument("--compare", action="store_true",
                     help="also run the batch-synchronous baseline; with "
                          "--spec-k / --prefix-cache ALSO re-runs the "
@@ -442,9 +562,29 @@ def main():
                   f"{(iw['p99'] or 0) * 1e3:.0f}ms)")
         return
 
+    if args.disagg:
+        d = run_disagg(args, cfg, params, workload)
+        print(f"[serve] disagg {d['prefill_devices']}+"
+              f"{d['decode_devices']} (decode {d['attn_impl']}, "
+              f"prefill {d['prefill_impl']}, "
+              f"transfer {d['transfer_impl']}): "
+              f"{d['tokens']} tokens, "
+              f"{d['wall_s']:.2f}s wall ({d['busy_s']:.2f}s busy) -> "
+              f"{d['tok_s']:.1f} tok/s | "
+              f"latency p50 {d['p50_s'] * 1e3:.0f}ms "
+              f"p99 {d['p99_s'] * 1e3:.0f}ms | "
+              f"{d['steps']} decode steps + "
+              f"{d['prefill_steps']} prefill-slice steps")
+        print(f"[serve]   shipped {d['transfers']} KV shipments "
+              f"({d['transfer_bytes'] / 1e6:.2f} MB) | "
+              f"{d['preemptions']} preemptions, "
+              f"{d['replay_mismatches']} replay mismatches")
+        return
+
     cont = run_continuous(args, cfg, params, workload)
     print(f"[serve] continuous (decode {cont['attn_impl']}, "
-          f"prefill {cont['prefill_impl']}): "
+          f"prefill {cont['prefill_impl']}, "
+          f"transfer {cont['transfer_impl']}): "
           f"{cont['tokens']} tokens, "
           f"{cont['wall_s']:.2f}s wall ({cont['busy_s']:.2f}s busy) -> "
           f"{cont['tok_s']:.1f} tok/s | "

@@ -666,6 +666,13 @@ class GenerateResult:
     "xla-chunked", or "attention-free" — so interleaved-mode CPU
     interpret numbers can't be misread as TPU numbers. Both are static
     metadata (pytree aux), so jitted callers carry them for free.
+
+    ``transfer_impl`` reports how prefilled KV reached the decode
+    kernel: "colocated" (same pool — every single-tier path), or
+    "device_put:ics" / "device_put:dcn" for a disaggregated run whose
+    prefill-slice blocks shipped within one process / across processes
+    (``repro.serve.disagg``) — so disagg benchmark numbers can't be
+    misread as colocated ones (or vice versa).
     """
 
     tokens: jax.Array        # (B, max_new)
@@ -674,25 +681,30 @@ class GenerateResult:
     text_lengths: jax.Array  # (B,) tokens before EOS
     attn_impl: str = ""      # resolved decode-attention path (static)
     prefill_impl: str = ""   # resolved prefill-attention path (static)
+    transfer_impl: str = ""  # prefill→decode KV transfer path (static)
 
     def tree_flatten(self):
         return (self.tokens, self.lengths, self.steps,
-                self.text_lengths), (self.attn_impl, self.prefill_impl)
+                self.text_lengths), (self.attn_impl, self.prefill_impl,
+                                     self.transfer_impl)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, attn_impl=aux[0], prefill_impl=aux[1])
+        return cls(*children, attn_impl=aux[0], prefill_impl=aux[1],
+                   transfer_impl=aux[2])
 
 
 def _result_from_tokens(toks, eos_id, steps, attn_impl: str = "",
-                        prefill_impl: str = "") -> "GenerateResult":
+                        prefill_impl: str = "",
+                        transfer_impl: str = "") -> "GenerateResult":
     has_eos = (toks == eos_id).any(axis=1)
     first_eos = jnp.argmax(toks == eos_id, axis=1)
     lengths = jnp.where(has_eos, first_eos + 1, toks.shape[1])
     return GenerateResult(tokens=toks, lengths=lengths,
                           steps=jnp.asarray(steps, jnp.int32),
                           text_lengths=lengths - has_eos,
-                          attn_impl=attn_impl, prefill_impl=prefill_impl)
+                          attn_impl=attn_impl, prefill_impl=prefill_impl,
+                          transfer_impl=transfer_impl)
 
 
 def generate_batch_sync(params, cfg: ModelConfig, prompt: jax.Array, *,
@@ -756,7 +768,8 @@ def generate_batch_sync(params, cfg: ModelConfig, prompt: jax.Array, *,
     toks = ta.stack().T                                  # (B, max_new)
     return _result_from_tokens(
         toks, eos_id, i, attn_impl=resolved_attn_impl(cfg, kv_impl),
-        prefill_impl=resolved_prefill_impl(cfg, kv_impl, "oneshot"))
+        prefill_impl=resolved_prefill_impl(cfg, kv_impl, "oneshot"),
+        transfer_impl="colocated")
 
 
 # Wrapper scheduler reuse: jit caches key on closure identity, so a
@@ -836,4 +849,5 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, max_new: int,
     return _result_from_tokens(jnp.asarray(toks), eos_id,
                                sched.total_steps,
                                attn_impl=sched.attn_impl,
-                               prefill_impl=sched.prefill_impl)
+                               prefill_impl=sched.prefill_impl,
+                               transfer_impl=sched.transfer_impl)

@@ -425,6 +425,20 @@ class KVCache:
         Dense rows hold no pool blocks → zeros."""
         return jnp.zeros((self.n_rows,), jnp.int32)
 
+    # ---- cross-pool block shipping (disaggregated serving) ----
+    def export_rows(self, rows, n_cols: int):
+        """Pack the K/V bits behind ``rows``' leading ``n_cols`` table
+        columns into a FRESH dense-of-blocks buffer
+        ``(L, len(rows), n_cols, block, KV, hd)`` — the wire format
+        for shipping finished prefill blocks to another pool
+        (``serve/disagg.py``). Paged only."""
+        raise NotImplementedError
+
+    def import_rows(self, rows, k_data, v_data, mask=None) -> "KVCache":
+        """Scatter ``export_rows``-shaped buffers into ``rows``'
+        leading table columns (allocate the rows first). Paged only."""
+        raise NotImplementedError
+
     # ---- placement ----
     def shardings(self, rules, mesh=None, row_axis: str = sh.BATCH):
         """Matching-structure pytree of ``NamedSharding``s."""
@@ -782,6 +796,48 @@ class PagedKVCache(KVCache):
                                        owner=owner, refcount=refcount)
 
         return jax.lax.cond(jnp.any(needs), do_cow, lambda c: c, self)
+
+    # ---- cross-pool block shipping (disaggregated serving) ----
+
+    def export_rows(self, rows, n_cols: int):
+        """Gather ``rows``' leading ``n_cols`` table columns into fresh
+        ``(L, R, n_cols, block, KV, hd)`` K/V buffers — block-granular,
+        layout-preserving, and *fresh* (no aliasing into the pool), so
+        the caller can ``device_put`` the result into another pool's
+        sharding while this pool keeps mutating. Unallocated columns
+        (``table == -1`` — a short prompt's tail) come back zeroed; the
+        importer's table routes them nowhere, so the zeros are inert.
+        ``n_cols`` is static (the wire shape)."""
+        rows = jnp.asarray(rows, jnp.int32)
+        cols = self.table[rows, :int(n_cols)]             # (R, n_cols)
+        live = (cols >= 0)[None, :, :, None, None, None]
+        safe = jnp.clip(cols, 0)
+        k = jnp.where(live, self.k_pool[:, safe], 0)
+        v = jnp.where(live, self.v_pool[:, safe], 0)
+        return k, v
+
+    def import_rows(self, rows, k_data, v_data,
+                    mask=None) -> "PagedKVCache":
+        """Scatter ``export_rows``-shaped buffers ``(L, R, n_cols,
+        block, KV, hd)`` into ``rows``' leading table columns — the
+        receiving half of a block shipment. The rows must already hold
+        fresh allocations (``alloc`` first); columns the destination
+        table doesn't back (``-1``) and unmasked rows drop, so a short
+        shipment into a longer allocation only touches what it
+        carries."""
+        rows = jnp.asarray(rows, jnp.int32)
+        n, n_cols = rows.shape[0], k_data.shape[2]
+        mask = jnp.ones((n,), bool) if mask is None else mask
+        dst = self.table[rows, :n_cols]                   # (n, n_cols)
+        dst = jnp.where((dst >= 0) & mask[:, None], dst, self.n_blocks)
+        flat = dst.reshape(-1)
+        kd = k_data.astype(self.k_pool.dtype).reshape(
+            (k_data.shape[0], n * n_cols) + k_data.shape[3:])
+        vd = v_data.astype(self.v_pool.dtype).reshape(
+            (v_data.shape[0], n * n_cols) + v_data.shape[3:])
+        k_pool = self.k_pool.at[:, flat].set(kd, mode="drop")
+        v_pool = self.v_pool.at[:, flat].set(vd, mode="drop")
+        return dataclasses.replace(self, k_pool=k_pool, v_pool=v_pool)
 
     def shardings(self, rules, mesh=None, row_axis: str = sh.BATCH):
         pool = rules.sharding(

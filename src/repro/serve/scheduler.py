@@ -464,6 +464,16 @@ class DecodeScheduler:
         draft is small by construction, so its cache is not worth
         block-accounting) and prefills the prompt alongside the target
         inside the same chunked iterations.
+      prefill_only: run this pool as the PREFILL TIER of a
+        disaggregated deployment (``serve/disagg.py``): a slot whose
+        prompt finishes prefilling retires (``done``) instead of
+        flipping to RUNNING — it never decodes. The host harvests it
+        with ``harvest_prefilled`` (first sampled token + resident KV
+        blocks), ships the blocks to a decode-tier pool
+        (``KVCache.export_rows`` → ``splice_requests``), and frees the
+        slot with ``release_slots``. Requires ``prefill='chunked'``
+        (the tier IS the chunked admission path) and ``kv='paged'``
+        (shipping is block-granular).
     """
 
     def __init__(self, params, cfg, *, n_slots: int, prompt_len: int,
@@ -476,7 +486,8 @@ class DecodeScheduler:
                  prefill: str = "oneshot", chunk_tokens: int = 16,
                  prefix_cache: bool = False,
                  speculative: Optional[spec_lib.SpecConfig] = None,
-                 draft_params=None, draft_cfg=None):
+                 draft_params=None, draft_cfg=None,
+                 prefill_only: bool = False):
         if n_slots < 1 or max_new_cap < 1:
             raise ValueError("need n_slots >= 1 and max_new_cap >= 1")
         if not 1 <= admit_threshold <= n_slots:
@@ -501,6 +512,18 @@ class DecodeScheduler:
                 "only the chunked path's per-row offsets support) and "
                 "kv='paged' (sharing is a block-table mapping); got "
                 f"prefill={prefill!r}, kv={kv!r}")
+        if prefill_only:
+            if prefill != "chunked" or kv != "paged":
+                raise ValueError(
+                    "prefill_only=True (disaggregated prefill tier) "
+                    "requires prefill='chunked' and kv='paged': the "
+                    "tier exists to run chunked admission and ship "
+                    f"block-granular KV; got prefill={prefill!r}, "
+                    f"kv={kv!r}")
+            if speculative is not None:
+                raise ValueError(
+                    "a prefill-only tier never decodes; speculative "
+                    "decoding belongs on the decode tier")
         if speculative is not None:
             spec_lib.validate(speculative, cfg, prefill, draft_cfg,
                               draft_params, prefix_len)
@@ -537,6 +560,7 @@ class DecodeScheduler:
                                                       kv_block)
                           if kv_blocks is None else int(kv_blocks))
         self._kv_key = engine.kv_key(cfg)
+        self.prefill_only = bool(prefill_only)
         self.speculative = speculative
         self.draft_cfg = draft_cfg
         self._draft_params = draft_params
@@ -598,6 +622,12 @@ class DecodeScheduler:
                                  else self._build_admit())
         self._step_fn = jax.jit(self._build_step())
         self._preempt_fn = jax.jit(self._build_preempt())
+        # disaggregated decode-tier admission (register + alloc +
+        # import shipped blocks); only meaningful for paged chunked
+        # pools that DO decode
+        self._splice_fn = (jax.jit(self._build_splice())
+                           if prefill == "chunked" and kv == "paged"
+                           and not prefill_only else None)
 
     # ---------------- pool construction ----------------
 
@@ -876,6 +906,77 @@ class DecodeScheduler:
 
         return preempt
 
+    # ---------------- in-graph splice admission (disagg decode tier) --
+
+    def _build_splice(self):
+        """Disaggregated decode-tier admission: register + alloc +
+        IMPORT shipped blocks. The spliced request arrives with its
+        prompt KV already computed (on the prefill slice) and its
+        first token already sampled there: this fn allocates fresh
+        blocks for the full residency, scatters the shipped block
+        buffer into the row's leading table columns
+        (``PagedKVCache.import_rows``) and registers the slot directly
+        in the RUNNING state — ``cur_len = plen + 1`` with position
+        ``plen`` still unwritten, exactly the state a colocated slot
+        is in the instant its final chunk flips it PREFILLING→RUNNING
+        (the first decode step appends token 0's K/V at ``cur_len - 1``
+        on both paths, and request keys are rid-derived on both tiers,
+        which is what makes disaggregated decode bit-identical)."""
+        n, kv_key = self.n_slots, self._kv_key
+        base_key = self._base_key
+
+        def splice(pool: SlotPool, prompts, plens, slots, rids,
+                   max_news, keys, derive, mask, prios, deadlines, t0,
+                   k_data, v_data) -> SlotPool:
+            """slots/mask/rids/... as in ``_assign``; t0 (n,) int32 —
+            each spliced request's prefill-sampled first token;
+            k_data/v_data (L, k, n_cols, block, KV, hd) — the shipped
+            block buffers for the k masked rows (already placed in
+            this pool's sharding by the caller's ``device_put``)."""
+            k = k_data.shape[1]
+            cache = pool.cache
+            node = cache[kv_key]
+            node = node.free(slots, mask=mask)
+            node = node.alloc(slots, plens + max_news + 1, mask=mask)
+            node = node.import_rows(slots[:k], k_data, v_data,
+                                    mask=mask[:k])
+            cache = {**cache, kv_key: node}
+            rkeys = jnp.where(
+                derive[:, None],
+                jax.vmap(lambda r: jax.random.fold_in(base_key, r))(rids),
+                keys)
+
+            def sreg(vec, new):
+                m = mask.reshape((n,) + (1,) * (vec.ndim - 1))
+                return vec.at[slots].set(
+                    jnp.where(m, new.astype(vec.dtype), vec[slots]))
+
+            return dataclasses.replace(
+                pool, cache=cache,
+                next_token=sreg(pool.next_token, t0),
+                cur_len=sreg(pool.cur_len,
+                             (plens + 1).astype(jnp.int32)),
+                n_emitted=sreg(pool.n_emitted,
+                               jnp.zeros((n,), jnp.int32)),
+                budget=sreg(pool.budget, max_news),
+                active=sreg(pool.active, jnp.ones((n,), bool)),
+                done=sreg(pool.done, jnp.zeros((n,), bool)),
+                request_id=sreg(pool.request_id, rids),
+                keys=sreg(pool.keys, rkeys),
+                out=sreg(pool.out, jnp.zeros_like(pool.out)),
+                prompt=sreg(pool.prompt, prompts),
+                plen=sreg(pool.plen, plens),
+                pf_pos=sreg(pool.pf_pos, plens),
+                prefilling=sreg(pool.prefilling, jnp.zeros((n,), bool)),
+                priority=sreg(pool.priority, prios),
+                deadline=sreg(pool.deadline, deadlines),
+                slot_layers=sreg(pool.slot_layers,
+                                 jnp.zeros((n,), jnp.int32)),
+                slot_decodes=sreg(pool.slot_decodes,
+                                  jnp.zeros((n,), jnp.int32)))
+
+        return splice
+
     # ---------------- in-graph decode segment -------------------------
 
     def _build_step(self):
@@ -883,6 +984,7 @@ class DecodeScheduler:
         eos_id, cap, n = self.eos_id, self.max_new_cap, self.n_slots
         kv_key = self._kv_key
         chunked = self.prefill == "chunked"
+        prefill_only = self.prefill_only
         C = self.chunk_tokens
         spec = self.speculative
         d_cfg = self.draft_cfg
@@ -905,7 +1007,11 @@ class DecodeScheduler:
             position samples its first token from that position's
             logits — exactly the lane the one-shot admission samples —
             and flips PREFILLING → RUNNING, so it decodes in this very
-            iteration.
+            iteration. A prefill-ONLY tier flips it PREFILLING → DONE
+            instead: the first token and the resident KV blocks wait
+            for the host to ship them to the decode tier
+            (``harvest_prefilled``), and the decode branch of the loop
+            never fires.
             """
             logits, cache = engine.prefill_chunk(
                 params, cfg, p.prompt, p.cache, p.pf_pos, rules,
@@ -931,7 +1037,8 @@ class DecodeScheduler:
                 cur_len=jnp.where(fin, p.plen + 1, p.cur_len),
                 pf_pos=jnp.where(p.prefilling, p.pf_pos + C, p.pf_pos),
                 prefilling=p.prefilling & ~fin,
-                active=p.active | fin)
+                active=(p.active if prefill_only else p.active | fin),
+                done=(p.done | fin if prefill_only else p.done))
 
         def decode_fn(params, p: SlotPool) -> SlotPool:
             tok = p.next_token                           # (n,)
@@ -1519,6 +1626,12 @@ class DecodeScheduler:
             else:
                 self._slot_blocks[slot] = need
             self._free_blocks -= need
+        # Residency peaks right after admission, whoever drove it: a
+        # whole admitted batch can retire within one segment, and bench
+        # drivers call _admit_queued directly without going through
+        # step() — sampling here (the common admission round) is what
+        # makes every mode report peak_resident.
+        self.peak_resident = max(self.peak_resident, self.active_count)
         return k
 
     def _harvest(self) -> List[FinishedRequest]:
@@ -1571,6 +1684,35 @@ class DecodeScheduler:
         # must not accumulate every historical token array.
         return got
 
+    def dispatch_segment(self, expect_arrivals: bool = False,
+                         max_steps: Optional[int] = None) -> bool:
+        """Admit + LAUNCH one device segment without waiting on it.
+
+        The async half of ``step``: the jitted segment is dispatched
+        and the call returns while the device works. The disaggregated
+        driver (``serve/disagg.py``) uses this to overlap its two
+        submeshes — the prefill slice's segment is launched before the
+        decode slice's round blocks on its own harvest, so the slices
+        compute concurrently (the paper's non-strict overlap argument
+        applied across device sets). Returns False when there was
+        nothing to run (idle pool, nothing admitted)."""
+        self._admit_queued()
+        if self.active_count == 0:
+            return False
+        if not self.queue and not expect_arrivals:
+            want = self.n_slots + 1          # drain: never pause
+        else:
+            # Return once enough slots have freed *beyond those already
+            # idle at entry* (idle slots the queue couldn't fill don't
+            # count — an absolute threshold would exit without decoding)
+            fresh = (min(self.admit_threshold, len(self.queue))
+                     if self.queue else self.admit_threshold)
+            want = self.free_slots + fresh
+        cap = _NO_STEP_CAP if max_steps is None else np.int32(max_steps)
+        self.pool = self._step_fn(self.params, self._draft_params,
+                                  self.pool, np.int32(want), cap)
+        return True
+
     def step(self, expect_arrivals: bool = False,
              max_steps: Optional[int] = None) -> List[FinishedRequest]:
         """One scheduling round: admit → device segment → harvest.
@@ -1589,27 +1731,161 @@ class DecodeScheduler:
         iterations to surface tokens and revisit preemption decisions
         even while every slot stays busy. ``None`` keeps the classic
         free-slot-only pauses.
+
+        A prefill-only tier returns [] always: its finished rows carry
+        shippable KV, not emissions — collect them with
+        ``harvest_prefilled`` and free them with ``release_slots``.
         """
-        self._admit_queued()
-        self.peak_resident = max(self.peak_resident, self.active_count)
-        if self.active_count == 0:
+        if not self.dispatch_segment(expect_arrivals, max_steps):
             return []
-        if not self.queue and not expect_arrivals:
-            want = self.n_slots + 1          # drain: never pause
-        else:
-            # Return once enough slots have freed *beyond those already
-            # idle at entry* (idle slots the queue couldn't fill don't
-            # count — an absolute threshold would exit without decoding)
-            fresh = (min(self.admit_threshold, len(self.queue))
-                     if self.queue else self.admit_threshold)
-            want = self.free_slots + fresh
-        cap = _NO_STEP_CAP if max_steps is None else np.int32(max_steps)
-        self.pool = self._step_fn(self.params, self._draft_params,
-                                  self.pool, np.int32(want), cap)
         # one post-segment sync (needed before harvest anyway); busy
         # slot-steps accumulate in-graph next to `steps`
         self.total_steps = int(self.pool.steps)
+        if self.prefill_only:
+            return []
         return self._harvest()
+
+    # ---------------- disaggregation hooks (serve/disagg.py) ----------
+
+    def harvest_prefilled(self) -> List[dict]:
+        """Prefill-only tier: collect rows whose prompt just finished.
+
+        Returns one record per finished row — ``slot``, the host-side
+        request ``req``, the first sampled token ``t0`` (the lane the
+        colocated path samples at its PREFILLING→RUNNING flip) and the
+        prefilled stream length ``plen`` — WITHOUT freeing anything:
+        the slot stays resident so its blocks keep backing the KV the
+        caller is about to export/ship. Call ``release_slots`` once
+        the export is dispatched — and before the next segment, whose
+        entry clears ``done`` in-graph."""
+        if not self.prefill_only:
+            raise RuntimeError("harvest_prefilled() requires a "
+                               "prefill_only=True scheduler")
+        self.total_steps = int(self.pool.steps)
+        done = np.asarray(self.pool.done)
+        if not done.any():
+            return []
+        t0 = np.asarray(self.pool.next_token)
+        plen = np.asarray(self.pool.plen)
+        return [{"slot": int(s), "req": self._slot_req[int(s)],
+                 "t0": int(t0[s]), "plen": int(plen[s])}
+                for s in np.nonzero(done)[0]]
+
+    def release_slots(self, slots) -> None:
+        """Free harvested-prefill rows (blocks + registers) once their
+        KV has been exported — the prefill-tier half of a block
+        shipment, one jitted dispatch (reuses the preemption fn:
+        refcounted free + register clear). The export buffer is fresh
+        (``export_rows`` gathers), so an in-flight ``device_put`` of
+        it is unaffected by the blocks being recycled here.
+        Prefix-index registrations flip READY and keep their pins,
+        exactly as at normal retirement — later warm hits on the
+        shipped prompt still map them."""
+        slots = sorted({int(s) for s in np.atleast_1d(
+            np.asarray(slots, np.int64))})
+        if not slots:
+            return
+        for s in slots:
+            if not 0 <= s < self.n_slots or not self._busy[s]:
+                raise ValueError(f"slot {s} is not resident")
+        mask = np.zeros(self.n_slots, bool)
+        mask[slots] = True
+        self.pool = self._preempt_fn(self.pool, mask, None)
+        for s in slots:
+            self._busy[s] = False
+            self._slot_req[s] = None
+            self._free_blocks += int(self._slot_blocks[s])
+            self._slot_blocks[s] = 0
+            if self.prefix_cache:
+                idx = self._prefix_index
+                for h in self._slot_regs[s]:
+                    e = idx.entries.get(h)
+                    if e is not None:
+                        e.ready = True
+                        e.row_refs -= 1
+                for h in self._slot_hits[s]:
+                    e = idx.entries.get(h)
+                    if e is not None:
+                        e.row_refs -= 1
+                self._slot_regs[s] = []
+                self._slot_hits[s] = []
+
+    def splice_requests(self, reqs, t0s, plens, k_data,
+                        v_data) -> List[int]:
+        """Admit already-prefilled requests into free slots — the
+        decode-tier half of a block shipment (disaggregated serving).
+
+        ``reqs`` are the ``_Queued`` records harvested from the
+        prefill tier, ``t0s`` their prefill-sampled first tokens,
+        ``plens`` their prefilled stream lengths, and
+        ``k_data``/``v_data`` the shipped ``(L, len(reqs), n_cols,
+        block, KV, hd)`` block buffers — ideally already
+        ``device_put`` into this pool's sharding, so an async transfer
+        overlaps host work and the jitted splice simply consumes it
+        when the bits land. The caller gates on ``free_slots`` /
+        ``free_blocks`` (the same head-of-line discipline as
+        ``_admit_queued``). Returns the slots filled."""
+        if self._splice_fn is None:
+            raise RuntimeError(
+                "splice_requests needs prefill='chunked', kv='paged' "
+                "and prefill_only=False (the disagg decode tier)")
+        k = len(reqs)
+        if k == 0:
+            return []
+        if k_data.shape[1] != k or k > self.free_slots:
+            raise RuntimeError(
+                f"splice of {k} requests needs {k} free slots and a "
+                f"matching shipment; free={self.free_slots}, "
+                f"shipment rows={k_data.shape[1]}")
+        needs = [int(kvc.blocks_needed(int(plens[i]) + reqs[i].max_new
+                                       + 1, self.kv_block))
+                 for i in range(k)]
+        if sum(needs) > self._free_blocks:
+            raise RuntimeError(
+                f"splice needs {sum(needs)} blocks; free="
+                f"{self._free_blocks} (caller must gate admission)")
+        n = self.n_slots
+        free = np.nonzero(~self._busy)[0]
+        busy = np.nonzero(self._busy)[0]
+        slots = np.concatenate([free, busy]).astype(np.int32)
+        mask = np.zeros(n, bool)
+        mask[:k] = True
+        prompts = np.zeros((n, self.prompt_len), np.int32)
+        plens_a = np.zeros(n, np.int32)
+        rids = np.full(n, -1, np.int32)
+        max_news = np.zeros(n, np.int32)
+        keys = np.zeros((n, 2), np.uint32)
+        derive = np.zeros(n, bool)
+        prios = np.zeros(n, np.int32)
+        deadlines = np.full(n, np.inf, np.float32)
+        t0v = np.zeros(n, np.int32)
+        for i, q in enumerate(reqs):
+            tl = q.prompt.shape[1]
+            prompts[i, :tl] = q.prompt[0]
+            plens_a[i] = int(plens[i])
+            rids[i] = q.request_id
+            max_news[i] = q.max_new
+            prios[i] = q.priority
+            deadlines[i] = q.deadline
+            t0v[i] = int(t0s[i])
+            if q.key is None:
+                derive[i] = True
+            else:
+                keys[i] = np.asarray(q.key, np.uint32)
+        self.pool = self._splice_fn(self.pool, prompts, plens_a, slots,
+                                    rids, max_news, keys, derive, mask,
+                                    prios, deadlines, t0v, k_data,
+                                    v_data)
+        filled = []
+        for i, q in enumerate(reqs):
+            slot = int(free[i])
+            self._busy[slot] = True
+            self._slot_req[slot] = q
+            self._slot_blocks[slot] = needs[i]
+            self._free_blocks -= needs[i]
+            filled.append(slot)
+        self.peak_resident = max(self.peak_resident, self.active_count)
+        return filled
 
     # ---------------- preemption (SLO layer) --------------------------
 
@@ -1770,6 +2046,15 @@ class DecodeScheduler:
         numbers either."""
         return engine.resolved_prefill_impl(self.cfg, self.kv,
                                             self.prefill)
+
+    @property
+    def transfer_impl(self) -> str:
+        """How prefilled KV reaches the decode attention kernel. A
+        single-tier scheduler prefills into the very pool it decodes
+        from — no transfer at all — reported as "colocated" so
+        disaggregated runs ("device_put:ics"/"device_put:dcn", see
+        ``serve/disagg.py``) can't be confused with it."""
+        return "colocated"
 
     @property
     def busy_slot_steps(self) -> int:

@@ -308,6 +308,49 @@ def test_validate_draft_model_constraints(smollm):
         spec_lib.validate(spec, cfg, "chunked", cfg, params, 4)
 
 
+# ---------------------- bounded segments ------------------------------------
+
+def test_bounded_segments_do_not_clip_verify_windows(smollm):
+    """``step(max_steps=)`` composes with speculation: a verify window
+    drafts, scores, and lands its accepted prefix within ONE in-graph
+    iteration, so the segment cap can pause the loop only BETWEEN
+    windows — never mid-window — and the greedy stream equals the
+    unbounded drive token for token (the SLO/disagg drivers rely on
+    exactly this when they run bounded decode segments over a
+    speculative tier)."""
+    cfg, params = smollm
+    prompts = _prompts(cfg, 3, np.random.default_rng(11))
+    # the target drafting for itself accepts EVERY window in full —
+    # maximal multi-token landings, so a mid-window clip WOULD show up
+    spec = spec_lib.SpecConfig(k=3, drafter="model")
+    ref, s_ref = _drive(params, cfg, prompts, spec,
+                        draft_params=params, draft_cfg=cfg)
+    assert s_ref.spec_windows > 0 and s_ref.accepted_tokens > 0
+
+    sched = sched_lib.DecodeScheduler(
+        params, cfg, n_slots=2, prompt_len=16, max_new_cap=8,
+        eos_id=1, kv="paged", kv_block=4, prefill="chunked",
+        chunk_tokens=5, seed=0, speculative=spec,
+        draft_params=params, draft_cfg=cfg)
+    for b, p in enumerate(prompts):
+        sched.submit(np.asarray(p)[None, :], max_new=8, request_id=b)
+    out, rounds = {}, 0
+    while sched.pending:
+        for f in sched.step(max_steps=2):
+            out[f.request_id] = f.tokens
+        rounds += 1
+        assert rounds < 200
+    assert out.keys() == ref.keys()
+    for rid in ref:
+        np.testing.assert_array_equal(out[rid], ref[rid])
+    assert sched.spec_windows > 0
+    assert sched.accepted_tokens == s_ref.accepted_tokens
+    # the cap bit: bounded rounds took MORE (smaller) segments, yet
+    # every emission landed in the same place
+    assert rounds > 1
+    assert sched.free_blocks == sched.kv_blocks
+
+
 @pytest.fixture(scope="module")
 def smollm():
     cfg = get_config("smollm-135m", smoke=True)
